@@ -1,0 +1,71 @@
+"""§Roofline: format the dry-run artifacts into the per-(arch x shape) table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+the three-term roofline with dominant-bottleneck classification.  No jax
+needed — this is pure artifact post-processing, so it runs in benchmarks.run
+without touching device state.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dryrun_dir: str = "experiments/dryrun", multi_pod: bool = False,
+         plan: str = "baseline"):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("multi_pod", False) != multi_pod:
+            continue
+        r_plan = r.get("plan") or "baseline"
+        if r_plan != ("auto" if plan == "auto" else "baseline"):
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def table(records: Dict) -> List[str]:
+    lines = ["| arch | shape | compute ms | memory ms | collective ms | "
+             "dominant | useful-flop ratio | HBM GiB/chip |",
+             "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape) in sorted(records, key=lambda k: (k[0],
+                                                        SHAPE_ORDER.index(k[1]))):
+        r = records[(arch, shape)]
+        if not r.get("ok"):
+            lines.append(f"| {arch} | {shape} | FAILED | | | | | |")
+            continue
+        t = r["roofline"]
+        ratio = r.get("useful_flop_ratio")
+        ratio_s = f"{ratio:.3f}" if ratio else "n/a"
+        lines.append(
+            f"| {arch} | {shape} | {t['compute_s']*1e3:.2f} "
+            f"| {t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} "
+            f"| {r['dominant'].replace('_s','')} | {ratio_s} "
+            f"| {r.get('hbm_gib_per_chip', 0):.2f} |")
+    return lines
+
+
+def rows(records) -> List[str]:
+    out = []
+    for (arch, shape), r in sorted(records.items()):
+        if not r.get("ok"):
+            continue
+        bound = max(r["roofline"].values())
+        out.append(f"roofline[{arch}][{shape}],"
+                   f"{bound*1e6:.0f},{r['dominant'].replace('_s','')}")
+    return out
+
+
+def summary(records) -> Dict[str, int]:
+    counts = {"compute_s": 0, "memory_s": 0, "collective_s": 0, "failed": 0}
+    for r in records.values():
+        if r.get("ok"):
+            counts[r["dominant"]] += 1
+        else:
+            counts["failed"] += 1
+    return counts

@@ -1,0 +1,52 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table2_acc[...]   derived = final accuracy (%)          (paper Table II)
+  table3_time[...]  derived = simulated convergence time  (paper Table III)
+  fig3_*[...]       derived = ledger TPS                  (paper Fig. 3)
+  roofline[...]     derived = dominant roofline term      (framework §Roofline)
+
+``python -m benchmarks.run [--full]`` — fast mode is CI-sized; --full runs
+the paper's full 3-dataset x 3-distribution grid.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-fl", action="store_true",
+                    help="only ledger + roofline benchmarks")
+    args = ap.parse_args()
+
+    rows = []
+
+    from benchmarks import chain_perf
+    chain_results = chain_perf.run_chain_perf()
+    rows += chain_perf.rows(chain_results)
+
+    from benchmarks import roofline
+    records = roofline.load()
+    if records:
+        rows += roofline.rows(records)
+        counts = roofline.summary(records)
+        print(f"# roofline dominant-term counts: {counts}", file=sys.stderr)
+
+    if not args.skip_fl:
+        from benchmarks import fl_tables
+        fl_results = fl_tables.run_tables(fast=not args.full)
+        rows += fl_tables.rows(fl_results)
+        if args.full:
+            from benchmarks import ablations
+            rows += ablations.rows(ablations.run_ablations())
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

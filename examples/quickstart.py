@@ -1,0 +1,54 @@
+"""Quickstart: DAG-AFL federating 3 CNN clients on synthetic MNIST (~60s CPU).
+
+Shows the full paper workflow: publisher posts genesis, trainers select tips
+(freshness + reachability + signature-filtered accuracy), aggregate (Eq. 6),
+train locally, publish metadata transactions, and the chain audits clean.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.cnn import vgg_for
+from repro.core import (DagAflConfig, DagAflCoordinator, TipSelectionConfig,
+                        verify_full_dag)
+from repro.core.simulator import CostModel, make_profiles
+from repro.data import make_benchmark_dataset, partition_dirichlet, split_811
+from repro.fl.backend import CNNBackend
+
+
+def main():
+    print("== DAG-AFL quickstart ==")
+    ds = make_benchmark_dataset("mnist", n_samples=1500, seed=0)
+    splits = split_811(ds)
+    # non-IID clients (Dirichlet beta=0.3)
+    parts = partition_dirichlet(splits["train"], 3, beta=0.3, seed=0)
+    client_data = []
+    for i, p in enumerate(parts):
+        s = split_811(p, seed=1)
+        client_data.append({"train": s["train"], "val": s["val"],
+                            "test": s["test"]})
+        print(f"client {i}: {len(p)} samples")
+
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=2, batch_size=32)
+    cfg = DagAflConfig(
+        n_clients=3, max_rounds=3, local_epochs=2,
+        tip=TipSelectionConfig(n_select=2, lam=0.5, alpha=0.1))
+    coord = DagAflCoordinator(backend, client_data, splits["test"], cfg,
+                              CostModel(), make_profiles(3, 0.6, 0))
+    res = coord.run()
+
+    print("\n== result ==")
+    print(res.row())
+    print(f"chain length       : {res.extra['chain_len']}")
+    print(f"tip evaluations    : {res.extra['tip_evaluations']}")
+    print(f"P2P bytes moved    : {res.extra['store_bytes_transferred']:,}")
+    ok, reason = verify_full_dag(coord.ledger)
+    print(f"chain audit        : {'OK' if ok else 'TAMPERED: ' + reason}")
+    print("\naccuracy history (sim_time, val_acc):")
+    for t, a in res.history:
+        print(f"  {t:8.1f}s  {a*100:5.1f}%")
+
+
+if __name__ == "__main__":
+    main()

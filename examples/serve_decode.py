@@ -1,0 +1,12 @@
+"""Serving example: batched prefill + KV-cache greedy decode.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma2-2b
+    PYTHONPATH=src python examples/serve_decode.py --arch jamba-v0.1-52b
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main()

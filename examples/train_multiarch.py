@@ -1,0 +1,25 @@
+"""End-to-end driver: train a ~100M-param transformer for a few hundred steps,
+optionally federated with DAG-AFL.
+
+    # ~100M model (xlstm-125m full config), 200 steps
+    PYTHONPATH=src python examples/train_multiarch.py --steps 200
+
+    # any assigned arch, reduced family member (fast CPU)
+    PYTHONPATH=src python examples/train_multiarch.py \
+        --arch deepseek-v2-236b --reduced --steps 50
+
+    # DAG-AFL federation of 4 transformer clients
+    PYTHONPATH=src python examples/train_multiarch.py \
+        --arch internlm2-1.8b --reduced --dagafl 4 --rounds 3
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    if "--arch" not in " ".join(sys.argv):
+        sys.argv += ["--arch", "xlstm-125m"]
+    if "--steps" not in " ".join(sys.argv):
+        sys.argv += ["--steps", "200"]
+    train_main()

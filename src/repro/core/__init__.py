@@ -1,0 +1,29 @@
+"""DAG-AFL core: the paper's primary contribution.
+
+DAG ledger + tip selection (freshness/reachability/accuracy) + signature
+contract + trustworthy verification + aggregation + the asynchronous
+event-driven coordinator that ties them together.
+"""
+from repro.core.aggregate import (tree_interpolate, tree_mean,
+                                  tree_size_bytes, tree_weighted)
+from repro.core.coordinator import DagAflConfig, DagAflCoordinator
+from repro.core.dag import (DAGLedger, ModelStore, Transaction, TxMetadata,
+                            compute_tx_hash)
+from repro.core.signature import (SimilarityContract, cosine_similarity,
+                                  cosine_similarity_matrix)
+from repro.core.simulator import (ClientProfile, ConvergenceTracker, CostModel,
+                                  EventLoop, RunResult, make_profiles)
+from repro.core.tip_selection import (TipScore, TipSelectionConfig, freshness,
+                                      select_tips, tipc)
+from repro.core.verify import (ValidationPath, extract_path, verify_full_dag,
+                               verify_path)
+
+__all__ = [
+    "DAGLedger", "ModelStore", "Transaction", "TxMetadata", "compute_tx_hash",
+    "TipSelectionConfig", "TipScore", "select_tips", "freshness", "tipc",
+    "SimilarityContract", "cosine_similarity", "cosine_similarity_matrix",
+    "tree_mean", "tree_weighted", "tree_interpolate", "tree_size_bytes",
+    "ValidationPath", "extract_path", "verify_path", "verify_full_dag",
+    "ClientProfile", "ConvergenceTracker", "CostModel", "EventLoop",
+    "RunResult", "make_profiles", "DagAflConfig", "DagAflCoordinator",
+]

@@ -1,0 +1,50 @@
+"""Model aggregation (paper Eq. 6) as jitted pytree programs.
+
+Eq. 6 is a plain average over the N selected tip models; ``tree_weighted``
+is the beyond-paper generalisation (staleness- or accuracy-weighted) used by
+the optimized DAG-AFL variant and by several baselines (FedAsync mixing,
+FedAT tier weighting).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def tree_mean(models: Sequence):
+    """Eq. 6: w = (1/N) * sum_i w_i  over a list of congruent pytrees."""
+    n = len(models)
+    return jax.tree_util.tree_map(
+        lambda *leaves: sum(l.astype(jnp.float32) for l in leaves) / n
+        if jnp.issubdtype(leaves[0].dtype, jnp.floating) else leaves[0],
+        *models)
+
+
+def tree_weighted(models: Sequence, weights: Sequence[float]):
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+    def combine(*leaves):
+        if not jnp.issubdtype(leaves[0].dtype, jnp.floating):
+            return leaves[0]
+        return sum(wi * l.astype(jnp.float32) for wi, l in zip(w, leaves))
+
+    return jax.tree_util.tree_map(combine, *models)
+
+
+@jax.jit
+def tree_interpolate(a, b, alpha: float):
+    """FedAsync-style mixing: (1-alpha)*a + alpha*b."""
+    return jax.tree_util.tree_map(
+        lambda x, y: ((1 - alpha) * x.astype(jnp.float32)
+                      + alpha * y.astype(jnp.float32))
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, a, b)
+
+
+def tree_size_bytes(model) -> int:
+    return sum(a.size * a.dtype.itemsize
+               for a in jax.tree_util.tree_leaves(model) if hasattr(a, "size"))

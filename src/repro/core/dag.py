@@ -1,0 +1,189 @@
+"""The DAG ledger (IOTA-style tangle) that DAG-AFL coordinates over.
+
+Transactions carry ONLY metadata (paper §III-A: ``<ClientId, Signature,
+ModelAccuracy, CurrentEpoch, ValidationNodeId>``); model weights travel peer
+to peer through :class:`ModelStore`.  Tips are transactions with in-degree 0
+(no later transaction approves them).  Each new transaction approves
+``n_parents`` tips (2 in the paper).
+
+Reachability (paper Alg. 1): BFS over *approval children* starting from the
+client's own latest transaction — a tip is *reachable* iff it (directly or
+transitively) approved the client's node, i.e. it has integrated the client's
+previous aggregate.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class TxMetadata:
+    """Exactly the tuple the paper puts on chain (§III-B end)."""
+
+    client_id: int
+    signature: Tuple[float, ...]       # feature signature vector (Eq. 3-4)
+    model_accuracy: float
+    current_epoch: int                 # trainer's global iteration epoch
+    validation_node_id: int
+
+    def digest(self) -> str:
+        payload = json.dumps({
+            "client_id": self.client_id,
+            "signature": [round(float(s), 8) for s in self.signature],
+            "model_accuracy": round(float(self.model_accuracy), 8),
+            "current_epoch": int(self.current_epoch),
+            "validation_node_id": int(self.validation_node_id),
+        }, sort_keys=True)
+        return hashlib.sha256(payload.encode()).hexdigest()
+
+
+@dataclass
+class Transaction:
+    tx_id: str
+    metadata: TxMetadata
+    parents: Tuple[str, ...]           # approved tips (empty for genesis)
+    timestamp: float                   # simulated publish time
+    tx_hash: str = ""                  # Eq. 7: H(H1 | H2 | hash(metadata))
+    model_ref: str = ""                # ModelStore key (P2P pointer)
+
+
+def compute_tx_hash(parent_hashes: Sequence[str], metadata: TxMetadata) -> str:
+    """Eq. 7: block header = parent hashes, body = metadata digest."""
+    h = hashlib.sha256()
+    for ph in parent_hashes:
+        h.update(ph.encode())
+    h.update(metadata.digest().encode())
+    return h.hexdigest()
+
+
+class ModelStore:
+    """P2P weight transport stand-in: tx_id -> model pytree.
+
+    On a pod, 'peers' are mesh slices and the transfer is device-to-device;
+    here it is an in-memory map so the DAG provably never carries weights.
+    """
+
+    def __init__(self):
+        self._store: Dict[str, object] = {}
+        self.bytes_transferred = 0
+
+    def put(self, key: str, model) -> str:
+        self._store[key] = model
+        return key
+
+    def get(self, key: str):
+        import jax
+        model = self._store[key]
+        self.bytes_transferred += sum(
+            a.size * a.dtype.itemsize for a in jax.tree_util.tree_leaves(model)
+            if hasattr(a, "size"))
+        return model
+
+    def evict(self, key: str):
+        self._store.pop(key, None)
+
+    def __contains__(self, key):
+        return key in self._store
+
+    def __len__(self):
+        return len(self._store)
+
+
+class DAGLedger:
+    """Append-only DAG of transactions with tip tracking."""
+
+    def __init__(self):
+        self.nodes: Dict[str, Transaction] = {}
+        self.children: Dict[str, List[str]] = {}
+        self._tips: set = set()
+        self.genesis_id: Optional[str] = None
+        self._counter = 0
+
+    # -- construction -------------------------------------------------------
+
+    def add_genesis(self, metadata: TxMetadata, timestamp: float = 0.0,
+                    model_ref: str = "") -> Transaction:
+        assert self.genesis_id is None, "genesis already exists"
+        tx = self._make_tx(metadata, (), timestamp, model_ref)
+        self.genesis_id = tx.tx_id
+        return tx
+
+    def add_transaction(self, metadata: TxMetadata, parents: Sequence[str],
+                        timestamp: float, model_ref: str = "") -> Transaction:
+        for p in parents:
+            if p not in self.nodes:
+                raise KeyError(f"unknown parent {p}")
+        return self._make_tx(metadata, tuple(parents), timestamp, model_ref)
+
+    def _make_tx(self, metadata, parents, timestamp, model_ref) -> Transaction:
+        tx_id = f"tx{self._counter:06d}"
+        self._counter += 1
+        parent_hashes = [self.nodes[p].tx_hash for p in parents]
+        tx = Transaction(tx_id=tx_id, metadata=metadata, parents=parents,
+                         timestamp=timestamp,
+                         tx_hash=compute_tx_hash(parent_hashes, metadata),
+                         model_ref=model_ref or tx_id)
+        self.nodes[tx_id] = tx
+        self.children[tx_id] = []
+        for p in parents:
+            self.children[p].append(tx_id)
+            self._tips.discard(p)
+        self._tips.add(tx_id)
+        return tx
+
+    # -- queries ------------------------------------------------------------
+
+    def tips(self) -> List[str]:
+        """Transactions with in-degree 0 (unapproved)."""
+        return sorted(self._tips)
+
+    def latest_of(self, client_id: int) -> Optional[str]:
+        best, best_t = None, -1.0
+        for tx in self.nodes.values():
+            if tx.metadata.client_id == client_id and tx.timestamp >= best_t:
+                best, best_t = tx.tx_id, tx.timestamp
+        return best
+
+    def reachable_tips(self, start_node: Optional[str]
+                       ) -> Tuple[List[str], List[str]]:
+        """Paper Alg. 1: BFS from the client's latest node over approval
+        children; returns (ReachableTips, UnreachableTips)."""
+        all_tips = set(self._tips)
+        if start_node is None or start_node not in self.nodes:
+            return [], sorted(all_tips)
+        visited = {start_node}
+        q = deque([start_node])
+        reachable = set()
+        while q:
+            node = q.popleft()
+            if node in all_tips:
+                reachable.add(node)
+            for ch in self.children[node]:
+                if ch not in visited:
+                    visited.add(ch)
+                    q.append(ch)
+        return sorted(reachable), sorted(all_tips - reachable)
+
+    def ancestors(self, tx_id: str, max_depth: Optional[int] = None):
+        """Walk parent links (used by verification paths)."""
+        out, depth = [], 0
+        frontier = list(self.nodes[tx_id].parents)
+        seen = set(frontier)
+        while frontier and (max_depth is None or depth < max_depth):
+            out.extend(frontier)
+            nxt = []
+            for f in frontier:
+                for p in self.nodes[f].parents:
+                    if p not in seen:
+                        seen.add(p)
+                        nxt.append(p)
+            frontier = nxt
+            depth += 1
+        return out
+
+    def __len__(self):
+        return len(self.nodes)

@@ -1,0 +1,76 @@
+"""Feature signatures and the similarity 'smart contract' (paper Eq. 3-5).
+
+``cosine_similarity_matrix`` is the jitted data-plane piece; the
+:class:`SimilarityContract` mirrors the paper's on-chain contract that stores
+a per-round client-similarity matrix for later queries.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def cosine_similarity_matrix(signatures: jnp.ndarray) -> jnp.ndarray:
+    """signatures (n_clients, n_sig) -> (n_clients, n_clients) cosine sims."""
+    s = signatures.astype(jnp.float32)
+    norm = jnp.linalg.norm(s, axis=-1, keepdims=True)
+    s = s / jnp.maximum(norm, 1e-12)
+    return s @ s.T
+
+
+@jax.jit
+def cosine_similarity(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    denom = jnp.maximum(jnp.linalg.norm(a) * jnp.linalg.norm(b), 1e-12)
+    return jnp.dot(a, b) / denom
+
+
+class SimilarityContract:
+    """Smart-contract stand-in: records similarity matrices per round and
+    answers top-p most-similar queries (paper §III-B3)."""
+
+    def __init__(self, n_clients: int):
+        self.n_clients = n_clients
+        self._rounds: Dict[int, np.ndarray] = {}
+        self._latest_sig: Dict[int, np.ndarray] = {}
+
+    def post_signature(self, client_id: int, signature) -> None:
+        self._latest_sig[client_id] = np.asarray(signature, np.float32)
+
+    def signatures_known(self) -> Sequence[int]:
+        return sorted(self._latest_sig)
+
+    def commit_round(self, round_idx: int) -> Optional[np.ndarray]:
+        """Compute + store the similarity matrix from the latest signatures."""
+        if len(self._latest_sig) < 2:
+            return None
+        ids = sorted(self._latest_sig)
+        sigs = jnp.stack([jnp.asarray(self._latest_sig[i]) for i in ids])
+        mat = np.asarray(cosine_similarity_matrix(sigs))
+        full = np.full((self.n_clients, self.n_clients), np.nan, np.float32)
+        for a, ia in enumerate(ids):
+            for b, ib in enumerate(ids):
+                full[ia, ib] = mat[a, b]
+        self._rounds[round_idx] = full
+        return full
+
+    def query(self, round_idx: int, client_id: int) -> Optional[np.ndarray]:
+        """Similarity row for ``client_id`` at the latest round <= round_idx."""
+        rounds = [r for r in self._rounds if r <= round_idx]
+        if not rounds:
+            return None
+        return self._rounds[max(rounds)][client_id]
+
+    def most_similar(self, round_idx: int, client_id: int,
+                     candidates: Sequence[int], p: int) -> Sequence[int]:
+        row = self.query(round_idx, client_id)
+        if row is None:
+            return list(candidates)[:p]
+        scored = sorted(candidates,
+                        key=lambda c: -(row[c] if not np.isnan(row[c]) else -2.0))
+        return scored[:p]

@@ -1,0 +1,146 @@
+"""Tip selection (paper §III-B): freshness + reachability + model accuracy.
+
+The selection pipeline for client ``c`` choosing N tips:
+
+  1. Alg. 1 BFS from c's latest transaction splits current tips into
+     reachable / unreachable.
+  2. N1 = round(lambda*N) reachable tips: validated directly on c's local
+     validation set, ranked by ``freshness * accuracy``.
+  3. N2 = N - N1 unreachable tips: the similarity contract pre-filters the
+     p most signature-similar candidates (Eq. 5), only those are validated,
+     and the top N2 by accuracy are kept — this is the paper's trick for
+     avoiding accuracy evaluation of every tip.
+  4. Shortfalls on either side spill over to the other; if the DAG has
+     fewer than N tips, all of them are selected.
+
+Eq. 2 as printed increases with dwell time, contradicting the paper's prose;
+``literal_eq2=True`` reproduces the printed formula, the default implements
+the prose (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.dag import DAGLedger
+from repro.core.signature import SimilarityContract
+
+
+@dataclass(frozen=True)
+class TipSelectionConfig:
+    n_select: int = 2            # N (paper default: two tips per transaction)
+    lam: float = 0.5             # lambda: reachable fraction
+    alpha: float = 0.1           # freshness dwell-time decay factor
+    p_similar: int = 4           # p: candidates pre-filtered by similarity
+    literal_eq2: bool = False    # reproduce the paper's printed Eq. 2
+    use_freshness: bool = True
+    use_similarity: bool = True  # ablation: disable signature pre-filter
+
+
+def tipc(cur_epoch: int, tip_epoch: int) -> float:
+    """Eq. 1: epoch-gap factor, exp(-|T_cur - T_tip|) in (0, 1]."""
+    return math.exp(-abs(cur_epoch - tip_epoch))
+
+
+def freshness(cur_epoch: int, tip_epoch: int, now: float, tip_time: float,
+              alpha: float, literal_eq2: bool = False) -> float:
+    """Eq. 2 (prose semantics by default; see module docstring)."""
+    t = tipc(cur_epoch, tip_epoch)
+    dwell = max(now - tip_time, 0.0)
+    decay = 1.0 / (1.0 + alpha * dwell)
+    if literal_eq2:
+        return 1.0 / max(t * decay, 1e-12)
+    return t * decay
+
+
+@dataclass
+class TipScore:
+    tx_id: str
+    reachable: bool
+    freshness: float
+    accuracy: float
+    score: float
+
+
+def select_tips(ledger: DAGLedger,
+                client_id: int,
+                cur_epoch: int,
+                now: float,
+                evaluate_fn: Callable[[str], float],
+                contract: Optional[SimilarityContract],
+                cfg: TipSelectionConfig,
+                round_idx: int = 0) -> List[TipScore]:
+    """Returns the selected tips with their diagnostic scores.
+
+    ``evaluate_fn(tx_id) -> accuracy`` validates a tip's model on the calling
+    client's local validation data (the expensive step the similarity filter
+    minimises).
+    """
+    all_tips = ledger.tips()
+    # a client never selects its OWN transactions: the paper's reachable set
+    # (Fig. 2) is peers who integrated your aggregate, and P2P-fetching your
+    # own model is a no-op that silos training (observed: self-selection via
+    # the accuracy rank costs ~10 accuracy points under beta=0.1)
+    tips = [t for t in all_tips
+            if ledger.nodes[t].metadata.client_id != client_id]
+    if not tips:
+        tips = all_tips
+    n = min(cfg.n_select, len(tips))
+    if n == 0:
+        return []
+
+    start = ledger.latest_of(client_id)
+    reachable, unreachable = ledger.reachable_tips(start)
+    own = set(all_tips) - set(tips)
+    reachable = [t for t in reachable if t not in own]
+    unreachable = [t for t in unreachable if t not in own]
+
+    def fresh(tx_id: str) -> float:
+        tx = ledger.nodes[tx_id]
+        if not cfg.use_freshness:
+            return 1.0
+        return freshness(cur_epoch, tx.metadata.current_epoch, now,
+                         tx.timestamp, cfg.alpha, cfg.literal_eq2)
+
+    n1 = min(round(cfg.lam * n), len(reachable))
+    n2 = min(n - n1, len(unreachable))
+    n1 = min(n - n2, len(reachable))          # spill shortfall back
+
+    chosen: List[TipScore] = []
+
+    # -- reachable side: direct validation, freshness-weighted rank --------
+    scored_r = []
+    for t in reachable:
+        acc = evaluate_fn(t)
+        f = fresh(t)
+        scored_r.append(TipScore(t, True, f, acc, f * acc))
+    scored_r.sort(key=lambda s: -s.score)
+    chosen.extend(scored_r[:n1])
+
+    # -- unreachable side: similarity pre-filter, then validate ------------
+    if n2 > 0:
+        cands = list(unreachable)
+        if cfg.use_similarity and contract is not None:
+            owners = {t: ledger.nodes[t].metadata.client_id for t in cands}
+            p = max(cfg.p_similar, n2)
+            owner_rank = contract.most_similar(
+                round_idx, client_id, sorted(set(owners.values())), p)
+            rank_pos = {cid: i for i, cid in enumerate(owner_rank)}
+            cands.sort(key=lambda t: rank_pos.get(owners[t], len(rank_pos)))
+            cands = cands[:p]
+        scored_u = []
+        for t in cands:
+            acc = evaluate_fn(t)
+            f = fresh(t)
+            scored_u.append(TipScore(t, False, f, acc, f * acc))
+        scored_u.sort(key=lambda s: -s.accuracy)
+        chosen.extend(scored_u[:n2])
+
+    # -- top-up if still short (tiny DAGs) ----------------------------------
+    if len(chosen) < n:
+        remaining = [t for t in tips if t not in {c.tx_id for c in chosen}]
+        for t in sorted(remaining, key=lambda t: -fresh(t))[: n - len(chosen)]:
+            chosen.append(TipScore(t, t in reachable, fresh(t),
+                                   evaluate_fn(t), fresh(t)))
+    return chosen

@@ -1,0 +1,70 @@
+"""Trustworthy verification of the DAG (paper §III-C, Eq. 7).
+
+The task publisher holds the full DAG; trainers keep only *validation paths*
+(the hash chain from a tip back to genesis).  Re-deriving every hash along a
+stored path and comparing against the path's recorded values detects any
+tampering of metadata or structure by the publisher.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.core.dag import DAGLedger, Transaction, compute_tx_hash
+
+
+@dataclass(frozen=True)
+class PathRecord:
+    tx_id: str
+    tx_hash: str
+    parents: Tuple[str, ...]
+    metadata_digest: str
+
+
+@dataclass
+class ValidationPath:
+    """What a trainer stores: hash-chain records from a tip to genesis."""
+
+    tip_id: str
+    records: List[PathRecord]
+
+
+def extract_path(ledger: DAGLedger, tip_id: str) -> ValidationPath:
+    """Walk first-parent links from ``tip_id`` to genesis, recording hashes."""
+    records = []
+    cur: Optional[str] = tip_id
+    while cur is not None:
+        tx = ledger.nodes[cur]
+        records.append(PathRecord(tx.tx_id, tx.tx_hash, tx.parents,
+                                  tx.metadata.digest()))
+        cur = tx.parents[0] if tx.parents else None
+    return ValidationPath(tip_id=tip_id, records=records)
+
+
+def verify_path(ledger: DAGLedger, path: ValidationPath) -> Tuple[bool, str]:
+    """Re-derive each hash on the stored path from the publisher's current DAG
+    state; any mismatch => tampering.  Returns (ok, reason)."""
+    for rec in path.records:
+        tx = ledger.nodes.get(rec.tx_id)
+        if tx is None:
+            return False, f"{rec.tx_id}: transaction missing from DAG"
+        if tx.parents != rec.parents:
+            return False, f"{rec.tx_id}: approval edges changed"
+        if tx.metadata.digest() != rec.metadata_digest:
+            return False, f"{rec.tx_id}: metadata digest mismatch"
+        recomputed = compute_tx_hash(
+            [ledger.nodes[p].tx_hash for p in tx.parents
+             if p in ledger.nodes], tx.metadata)
+        if recomputed != rec.tx_hash:
+            return False, f"{rec.tx_id}: hash mismatch (Eq. 7 recompute)"
+    return True, "ok"
+
+
+def verify_full_dag(ledger: DAGLedger) -> Tuple[bool, str]:
+    """Publisher-side audit: every stored hash must re-derive (Eq. 7)."""
+    for tx in ledger.nodes.values():
+        recomputed = compute_tx_hash(
+            [ledger.nodes[p].tx_hash for p in tx.parents], tx.metadata)
+        if recomputed != tx.tx_hash:
+            return False, f"{tx.tx_id}: stored hash does not re-derive"
+    return True, "ok"

@@ -1,0 +1,9 @@
+from repro.data.partition import (label_distribution, partition_dirichlet,
+                                  partition_iid)
+from repro.data.synthetic import (Dataset, make_benchmark_dataset,
+                                  make_image_dataset, make_lm_dataset,
+                                  split_811)
+
+__all__ = ["Dataset", "make_benchmark_dataset", "make_image_dataset",
+           "make_lm_dataset", "split_811", "partition_iid",
+           "partition_dirichlet", "label_distribution"]

@@ -1,0 +1,33 @@
+"""Token-batch pipeline for LM training (synthetic Markov streams)."""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.data.synthetic import make_lm_dataset
+
+
+class TokenPipeline:
+    """Infinite (batch, seq+1) sampler over a token stream with optional
+    per-client sharding (each client sees a disjoint slice)."""
+
+    def __init__(self, vocab: int, batch: int, seq: int,
+                 n_tokens: int = 500_000, seed: int = 0,
+                 n_shards: int = 1, shard: int = 0):
+        stream = make_lm_dataset(vocab=vocab, n_tokens=n_tokens, seed=seed)
+        per = len(stream) // n_shards
+        self.stream = stream[shard * per:(shard + 1) * per]
+        self.batch = batch
+        self.seq = seq
+        self.rng = np.random.default_rng(seed * 997 + shard)
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        while True:
+            starts = self.rng.integers(
+                0, len(self.stream) - self.seq - 1, self.batch)
+            yield np.stack([self.stream[s:s + self.seq + 1] for s in starts])
+
+    def batch_dict(self, arr: np.ndarray):
+        return {"tokens": arr[:, :-1].astype(np.int32),
+                "labels": arr[:, 1:].astype(np.int32)}

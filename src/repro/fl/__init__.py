@@ -1,0 +1,10 @@
+from repro.fl.backend import CNNBackend, LMBackend
+from repro.fl.baselines import (ALGORITHMS, FLConfig, run_centralized,
+                                run_csafl, run_dagafl, run_dagfl,
+                                run_fedasync, run_fedat, run_fedavg,
+                                run_fedhisyn, run_independent, run_scalesfl)
+
+__all__ = ["CNNBackend", "LMBackend", "ALGORITHMS", "FLConfig",
+           "run_centralized", "run_independent", "run_fedavg", "run_fedasync",
+           "run_fedat", "run_csafl", "run_fedhisyn", "run_scalesfl",
+           "run_dagfl", "run_dagafl"]

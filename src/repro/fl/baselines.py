@@ -1,0 +1,405 @@
+"""The paper's eight competitors, all on the shared simulator substrate.
+
+Each algorithm consumes the same (backend, client_data, global_test,
+profiles, cost model) quintuple and returns a :class:`RunResult`, so the
+Table II / Table III benchmark compares like with like.
+
+  centralized   no privacy: one model on the pooled data (upper bound)
+  independent   each client alone (lower bound)
+  fedavg        McMahan et al. 2017 — synchronous rounds, barrier on slowest
+  fedasync      Xie et al. 2019 — server mixes on every arrival, staleness-
+                adaptive alpha
+  fedat         Chai et al. 2021 — latency tiers: sync within, async across
+  csafl         Zhang et al. 2021 — similarity clusters, semi-async groups
+  fedhisyn      Li et al. 2022 — speed clusters, sequential ring inside a
+                cluster then cross-cluster sync (slowest, like the paper)
+  dagfl         Cao et al. 2021 — DAG ledger, but tips chosen by cumulative
+                weight and EVERY candidate tip validated (no signature
+                pre-filter, no freshness) — DAG-AFL's direct ancestor
+  scalesfl      Madill et al. 2022 — sharded committee chain on top of
+                synchronous FL (per-round consensus overhead)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.aggregate import tree_interpolate, tree_mean, tree_weighted
+from repro.core.dag import DAGLedger, ModelStore, TxMetadata
+from repro.core.simulator import (ClientProfile, ConvergenceTracker, CostModel,
+                                  EventLoop, RunResult, make_profiles)
+
+
+@dataclass
+class FLConfig:
+    n_clients: int = 10
+    max_rounds: int = 30
+    local_epochs: int = 5
+    target_accuracy: Optional[float] = None
+    patience: int = 5
+    heterogeneity: float = 0.6
+    seed: int = 0
+    # algorithm-specific knobs
+    fedasync_alpha: float = 0.6
+    fedasync_staleness: str = "poly"     # poly | constant
+    n_tiers: int = 3                     # fedat / csafl / fedhisyn clusters
+    dagfl_n_select: int = 2
+    consensus_overhead: float = 1.5      # scalesfl per-round committee cost
+
+
+class _Harness:
+    """Common state for every baseline."""
+
+    def __init__(self, backend, client_data, global_test, cfg: FLConfig,
+                 cost=None, profiles=None):
+        import jax
+        self.backend = backend
+        self.client_data = client_data
+        self.global_test = global_test
+        self.cfg = cfg
+        self.cost = cost or CostModel()
+        self.profiles = profiles or make_profiles(cfg.n_clients,
+                                                  cfg.heterogeneity, cfg.seed)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.tracker = ConvergenceTracker(cfg.target_accuracy, cfg.patience)
+        self.key = jax.random.PRNGKey(cfg.seed)
+
+    def init_model(self):
+        from repro.core.aggregate import tree_size_bytes
+        m = self.backend.init(self.key)
+        self.cost.model_bytes = max(tree_size_bytes(m), 1)
+        return m
+
+    def train(self, model, client: int):
+        return self.backend.train_local(
+            model, self.client_data[client]["train"],
+            seed=int(self.rng.integers(2 ** 31)),
+            epochs=self.cfg.local_epochs)[0]
+
+    def val_acc(self, model, client: int) -> float:
+        return self.backend.evaluate(model, self.client_data[client]["val"])
+
+    def mean_val(self, model) -> float:
+        accs = [self.val_acc(model, c) for c in range(self.cfg.n_clients)]
+        return float(np.mean(accs))
+
+    def result(self, name, model, sim_time, rounds, extra=None) -> RunResult:
+        acc = self.backend.evaluate(model, self.global_test)
+        return RunResult(name=name, final_accuracy=acc,
+                         best_accuracy=max(acc, self.tracker.best),
+                         sim_time=sim_time, rounds=rounds,
+                         history=self.tracker.history, extra=extra or {})
+
+
+# ---------------------------------------------------------------------------
+# bounds
+# ---------------------------------------------------------------------------
+
+
+def run_centralized(backend, client_data, global_test, cfg: FLConfig,
+                    cost=None, profiles=None, pooled_train=None) -> RunResult:
+    h = _Harness(backend, client_data, global_test, cfg, cost, profiles)
+    model = h.init_model()
+    assert pooled_train is not None, "centralized needs the pooled train set"
+    t = 0.0
+    ref = h.profiles[0]
+    for r in range(cfg.max_rounds):
+        model, _ = backend.train_local(model, pooled_train, seed=r,
+                                       epochs=cfg.local_epochs)
+        t += h.cost.train_time(ref, cfg.local_epochs, h.rng)
+        if h.tracker.update(t, h.mean_val(model)):
+            break
+    return h.result("Centralized", model, h.tracker.converged_at or t, r + 1)
+
+
+def run_independent(backend, client_data, global_test, cfg: FLConfig,
+                    cost=None, profiles=None) -> RunResult:
+    h = _Harness(backend, client_data, global_test, cfg, cost, profiles)
+    accs, times = [], []
+    model0 = h.init_model()
+    last = model0
+    for c in range(cfg.n_clients):
+        model = model0
+        t = 0.0
+        tr = ConvergenceTracker(cfg.target_accuracy, cfg.patience)
+        for r in range(cfg.max_rounds):
+            model = h.train(model, c)
+            t += h.cost.train_time(h.profiles[c], cfg.local_epochs, h.rng)
+            if tr.update(t, h.val_acc(model, c)):
+                break
+        accs.append(backend.evaluate(model, global_test))
+        times.append(tr.converged_at or t)
+        h.tracker.history.extend(tr.history)
+        last = model
+    res = h.result("Independent", last, float(np.mean(times)), cfg.max_rounds)
+    res.final_accuracy = float(np.mean(accs))
+    res.best_accuracy = float(np.max(accs))
+    res.history = sorted(h.tracker.history)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# synchronous / asynchronous FL
+# ---------------------------------------------------------------------------
+
+
+def run_fedavg(backend, client_data, global_test, cfg: FLConfig,
+               cost=None, profiles=None, name="FedAvg",
+               round_overhead: float = 0.0) -> RunResult:
+    h = _Harness(backend, client_data, global_test, cfg, cost, profiles)
+    model = h.init_model()
+    t = 0.0
+    sizes = [len(client_data[c]["train"]) for c in range(cfg.n_clients)]
+    for r in range(cfg.max_rounds):
+        locals_, durations = [], []
+        for c in range(cfg.n_clients):
+            locals_.append(h.train(model, c))
+            durations.append(
+                h.cost.train_time(h.profiles[c], cfg.local_epochs, h.rng)
+                + 2 * h.cost.transfer_time(h.profiles[c], h.cost.model_bytes))
+        t += max(durations) + round_overhead      # synchronous barrier
+        model = tree_weighted(locals_, sizes)
+        if h.tracker.update(t, h.mean_val(model)):
+            break
+    return h.result(name, model, h.tracker.converged_at or t, r + 1)
+
+
+def run_fedasync(backend, client_data, global_test, cfg: FLConfig,
+                 cost=None, profiles=None) -> RunResult:
+    h = _Harness(backend, client_data, global_test, cfg, cost, profiles)
+    loop = EventLoop()
+    state = {"model": h.init_model(), "version": 0, "rounds": 0}
+
+    def client_round(c: int, local_version: int):
+        if h.tracker.done:
+            return
+        local = h.train(state["model"], c)
+        dur = (h.cost.train_time(h.profiles[c], cfg.local_epochs, h.rng)
+               + 2 * h.cost.transfer_time(h.profiles[c], h.cost.model_bytes))
+
+        def arrive(c=c, local=local, v=local_version):
+            staleness = state["version"] - v
+            alpha = cfg.fedasync_alpha
+            if cfg.fedasync_staleness == "poly":
+                alpha = alpha / (1.0 + staleness) ** 0.5
+            state["model"] = tree_interpolate(state["model"], local, alpha)
+            state["version"] += 1
+            state["rounds"] += 1
+            if state["rounds"] % cfg.n_clients == 0:
+                h.tracker.update(loop.now, h.mean_val(state["model"]))
+            if (not h.tracker.done
+                    and state["rounds"] < cfg.max_rounds * cfg.n_clients):
+                loop.schedule(0.0, lambda: client_round(c, state["version"]))
+
+        loop.schedule(dur, arrive)
+
+    for c in range(cfg.n_clients):
+        loop.schedule(float(h.rng.uniform(0, 1.0)),
+                      lambda c=c: client_round(c, 0))
+    loop.run(stop=lambda: h.tracker.done)
+    return h.result("FedAsync", state["model"],
+                    h.tracker.converged_at or loop.now, state["rounds"])
+
+
+# ---------------------------------------------------------------------------
+# tiered / clustered semi-async
+# ---------------------------------------------------------------------------
+
+
+def _cluster_by(values: List[float], n_clusters: int) -> List[List[int]]:
+    order = np.argsort(values)
+    return [list(part) for part in np.array_split(order, n_clusters)]
+
+
+def run_fedat(backend, client_data, global_test, cfg: FLConfig,
+              cost=None, profiles=None) -> RunResult:
+    """Latency tiers: synchronous within a tier, async weighted across."""
+    h = _Harness(backend, client_data, global_test, cfg, cost, profiles)
+    tiers = _cluster_by([p.speed for p in h.profiles], cfg.n_tiers)
+    loop = EventLoop()
+    tier_models = {i: None for i in range(len(tiers))}
+    state = {"model": h.init_model(), "rounds": 0, "tier_updates": [1] * len(tiers)}
+
+    def tier_round(ti: int, rnd: int):
+        if h.tracker.done or rnd >= cfg.max_rounds:
+            return
+        members = tiers[ti]
+        locals_, durs = [], []
+        for c in members:
+            locals_.append(h.train(state["model"], c))
+            durs.append(h.cost.train_time(h.profiles[c], cfg.local_epochs, h.rng)
+                        + 2 * h.cost.transfer_time(h.profiles[c],
+                                                   h.cost.model_bytes))
+        dur = max(durs)
+
+        def arrive(ti=ti, locals_=locals_, rnd=rnd):
+            tier_models[ti] = tree_mean(locals_)
+            state["tier_updates"][ti] += 1
+            # cross-tier weighted average: straggler tiers get MORE weight
+            # (FedAT's inverse-frequency weighting)
+            ready = [i for i in tier_models if tier_models[i] is not None]
+            inv = [1.0 / state["tier_updates"][i] for i in ready]
+            state["model"] = tree_weighted([tier_models[i] for i in ready], inv)
+            state["rounds"] += 1
+            h.tracker.update(loop.now, h.mean_val(state["model"]))
+            if not h.tracker.done:
+                loop.schedule(0.0, lambda: tier_round(ti, rnd + 1))
+
+        loop.schedule(dur, arrive)
+
+    for ti in range(len(tiers)):
+        loop.schedule(0.0, lambda ti=ti: tier_round(ti, 0))
+    loop.run(stop=lambda: h.tracker.done)
+    return h.result("FedAT", state["model"],
+                    h.tracker.converged_at or loop.now, state["rounds"])
+
+
+def run_csafl(backend, client_data, global_test, cfg: FLConfig,
+              cost=None, profiles=None) -> RunResult:
+    """Clustered semi-async: groups by data similarity (label histograms),
+    sync inside a group, FedAsync-style mixing across groups."""
+    h = _Harness(backend, client_data, global_test, cfg, cost, profiles)
+    # group by label distribution similarity
+    hists = []
+    for c in range(cfg.n_clients):
+        y = np.asarray(client_data[c]["train"].y)
+        n_classes = int(max(y.max() for cd in [client_data[i]["train"]
+                                               for i in range(cfg.n_clients)]
+                            for y in [np.asarray(cd.y)])) + 1
+        hist = np.bincount(y, minlength=n_classes).astype(float)
+        hists.append(hist / max(hist.sum(), 1))
+    proj = [float(np.argmax(hh)) + 0.01 * i for i, hh in enumerate(hists)]
+    groups = _cluster_by(proj, cfg.n_tiers)
+    loop = EventLoop()
+    state = {"model": h.init_model(), "rounds": 0, "version": 0}
+
+    def group_round(gi: int, rnd: int, version: int):
+        if h.tracker.done or rnd >= cfg.max_rounds:
+            return
+        members = groups[gi]
+        locals_, durs = [], []
+        for c in members:
+            locals_.append(h.train(state["model"], c))
+            durs.append(h.cost.train_time(h.profiles[c], cfg.local_epochs, h.rng)
+                        + 2 * h.cost.transfer_time(h.profiles[c],
+                                                   h.cost.model_bytes))
+        dur = max(durs)
+
+        def arrive(gi=gi, locals_=locals_, rnd=rnd, v=version):
+            staleness = state["version"] - v
+            alpha = cfg.fedasync_alpha / (1.0 + staleness) ** 0.5
+            state["model"] = tree_interpolate(state["model"],
+                                              tree_mean(locals_), alpha)
+            state["version"] += 1
+            state["rounds"] += 1
+            h.tracker.update(loop.now, h.mean_val(state["model"]))
+            if not h.tracker.done:
+                loop.schedule(0.0, lambda: group_round(gi, rnd + 1,
+                                                       state["version"]))
+
+        loop.schedule(dur, arrive)
+
+    for gi in range(len(groups)):
+        loop.schedule(0.0, lambda gi=gi: group_round(gi, 0, 0))
+    loop.run(stop=lambda: h.tracker.done)
+    return h.result("CSAFL", state["model"],
+                    h.tracker.converged_at or loop.now, state["rounds"])
+
+
+def run_fedhisyn(backend, client_data, global_test, cfg: FLConfig,
+                 cost=None, profiles=None) -> RunResult:
+    """Hierarchical sync: speed clusters; inside a cluster the model is
+    passed sequentially (ring), then clusters aggregate synchronously —
+    sequential passes make it the slowest method, as in the paper."""
+    h = _Harness(backend, client_data, global_test, cfg, cost, profiles)
+    clusters = _cluster_by([p.speed for p in h.profiles], cfg.n_tiers)
+    model = h.init_model()
+    t = 0.0
+    for r in range(cfg.max_rounds):
+        cluster_models, durs = [], []
+        for members in clusters:
+            m = model
+            dur = 0.0
+            for c in members:                      # sequential ring
+                m = h.train(m, c)
+                dur += (h.cost.train_time(h.profiles[c], cfg.local_epochs, h.rng)
+                        + 2 * h.cost.transfer_time(h.profiles[c],
+                                                   h.cost.model_bytes))
+            cluster_models.append(m)
+            durs.append(dur)
+        t += max(durs)                             # sync barrier on clusters
+        sizes = [sum(len(client_data[c]["train"]) for c in members)
+                 for members in clusters]
+        model = tree_weighted(cluster_models, sizes)
+        if h.tracker.update(t, h.mean_val(model)):
+            break
+    return h.result("FedHiSyn", model, h.tracker.converged_at or t, r + 1)
+
+
+# ---------------------------------------------------------------------------
+# blockchain-based competitors
+# ---------------------------------------------------------------------------
+
+
+def run_scalesfl(backend, client_data, global_test, cfg: FLConfig,
+                 cost=None, profiles=None) -> RunResult:
+    """Sharded committee chain over synchronous FL: FedAvg + per-round
+    shard-consensus overhead (committee validation of every local update)."""
+    h0 = CostModel() if cost is None else cost
+    overhead = cfg.consensus_overhead + 0.2 * cfg.n_clients * h0.eval_batch
+    res = run_fedavg(backend, client_data, global_test, cfg, cost, profiles,
+                     name="ScaleSFL", round_overhead=overhead)
+    return res
+
+
+def run_dagfl(backend, client_data, global_test, cfg: FLConfig,
+              cost=None, profiles=None) -> RunResult:
+    """DAG-FL (Cao et al.): DAG ledger, cumulative-weight tip selection,
+    every candidate validated, no freshness / signature filter."""
+    from repro.core.coordinator import DagAflConfig, DagAflCoordinator
+    from repro.core.tip_selection import TipSelectionConfig
+
+    dcfg = DagAflConfig(
+        n_clients=cfg.n_clients, max_rounds=cfg.max_rounds,
+        local_epochs=cfg.local_epochs, target_accuracy=cfg.target_accuracy,
+        patience=cfg.patience, heterogeneity=cfg.heterogeneity, seed=cfg.seed,
+        verify_paths=False,
+        tip=TipSelectionConfig(n_select=cfg.dagfl_n_select, lam=0.0,
+                               use_freshness=False, use_similarity=False,
+                               p_similar=max(cfg.n_clients, 8)))
+    coord = DagAflCoordinator(backend, client_data, global_test, dcfg,
+                              cost, profiles)
+    res = coord.run()
+    res.name = "DAG-FL"
+    return res
+
+
+def run_dagafl(backend, client_data, global_test, cfg: FLConfig,
+               cost=None, profiles=None, tip_cfg=None) -> RunResult:
+    from repro.core.coordinator import DagAflConfig, DagAflCoordinator
+    from repro.core.tip_selection import TipSelectionConfig
+
+    dcfg = DagAflConfig(
+        n_clients=cfg.n_clients, max_rounds=cfg.max_rounds,
+        local_epochs=cfg.local_epochs, target_accuracy=cfg.target_accuracy,
+        patience=cfg.patience, heterogeneity=cfg.heterogeneity, seed=cfg.seed,
+        tip=tip_cfg or TipSelectionConfig())
+    coord = DagAflCoordinator(backend, client_data, global_test, dcfg,
+                              cost, profiles)
+    return coord.run()
+
+
+ALGORITHMS = {
+    "centralized": run_centralized,
+    "independent": run_independent,
+    "fedavg": run_fedavg,
+    "fedasync": run_fedasync,
+    "fedat": run_fedat,
+    "csafl": run_csafl,
+    "fedhisyn": run_fedhisyn,
+    "scalesfl": run_scalesfl,
+    "dagfl": run_dagfl,
+    "dagafl": run_dagafl,
+}

@@ -1,0 +1,62 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Model code calls these through ``Runtime(use_pallas=True)``; on this CPU
+container they run in interpret mode (``interpret=True``), on TPU the same
+call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.selective_scan import selective_scan_bsd
+from repro.kernels.signature import signature_td
+from repro.kernels.mlstm import mlstm_chunkwise_bshd
+from repro.kernels.slstm import slstm_scan_bsd
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = -1,
+                    softcap: float = 0.0, interpret: bool = True):
+    """(B,S,H,hd) layout wrapper used by repro.models.attention."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               softcap=softcap, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+def selective_scan(x, dt, A, Bc, Cc, h0, *, chunk: int = 256,
+                   interpret: bool = True):
+    """Drop-in for repro.models.mamba.selective_scan_ref."""
+    return selective_scan_bsd(x, dt, A, Bc, Cc, h0, chunk=chunk,
+                              interpret=interpret)
+
+
+def signature(x, *, tau: float = 0.05, n_sig: int = 64,
+              interpret: bool = True):
+    """Activation (..., d) -> bucketed signature vector (n_sig,)."""
+    d = x.shape[-1]
+    flat = x.reshape(-1, d)
+    per_channel = signature_td(flat, tau=tau, interpret=interpret)
+    pad = (-d) % n_sig
+    if pad:
+        per_channel = jnp.pad(per_channel, (0, pad))
+    return jnp.mean(per_channel.reshape(n_sig, -1), axis=1)
+
+
+def slstm_scan(gates_x, R, c0, n0, h0, m0, *, chunk: int = 256,
+               interpret: bool = True):
+    """R-resident sLSTM recurrence (inference path)."""
+    return slstm_scan_bsd(gates_x, R, c0, n0, h0, m0, chunk=chunk,
+                          interpret=interpret)
+
+
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, *, chunk: int = 128,
+                    interpret: bool = True):
+    """Chunkwise mLSTM with VMEM-resident matrix memory (inference path)."""
+    return mlstm_chunkwise_bshd(q, k, v, i_gate, f_gate, chunk=chunk,
+                                interpret=interpret)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose contract)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -2.0e9
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = -1,
+                        softcap: float = 0.0):
+    """q (B,H,S,hd); k,v (B,K,S,hd); GQA by head repetition. f32 math."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= rows >= cols
+    if window > 0:
+        ok &= (rows - cols) < window
+    s = jnp.where(ok, s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def selective_scan_seq_ref(x, dt, A, Bc, Cc, h0):
+    """Plain sequential scan oracle. Shapes as in selective_scan_bsd."""
+    def step(h, xs):
+        xt, dtt, bt, ct = xs
+        da = jnp.exp(dtt[..., None] * A)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.sum(h * ct[:, None, :], axis=-1)
+        return h, y
+
+    xs = tuple(a.transpose(1, 0, 2) for a in (x, dt, Bc, Cc))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h
+
+
+def signature_ref(x, tau: float = 0.05):
+    """x (T, d) -> per-channel zero-fraction (d,)."""
+    if tau <= 0.0:
+        flags = (x == 0.0)
+    else:
+        flags = jnp.abs(x) < tau
+    return jnp.mean(flags.astype(jnp.float32), axis=0)
+
+
+def slstm_scan_ref(gates_x, R, c0, n0, h0, m0):
+    """Sequential oracle for the sLSTM kernel (same math as models.xlstm)."""
+    d = R.shape[0]
+
+    def step(carry, gx_t):
+        c, n, h, m = carry
+        gates = gx_t + h @ R
+        i_t, f_t, z_t, o_t = jnp.split(gates, 4, axis=-1)
+        m_new = jnp.maximum(f_t + m, i_t)
+        iprime = jnp.exp(i_t - m_new)
+        fprime = jnp.exp(f_t + m - m_new)
+        c = fprime * c + iprime * jnp.tanh(z_t)
+        n = fprime * n + iprime
+        h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0),
+                                    gates_x.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), (c, n, h, m)

@@ -1,0 +1,62 @@
+"""DAG-AFL feature-signature Pallas TPU kernel (paper Eq. 3-4 adaptation).
+
+Computes the per-channel threshold-zero fraction of an activation matrix
+(T, d) as a block-tiled VMEM reduction: the grid walks T blocks sequentially
+while a (d,) VMEM scratch accumulates counts — the activation tensor is read
+from HBM exactly once and no intermediate (T, d) flag tensor is ever
+materialised (the pure-jnp path writes one).  The CNN path's exact-zero count
+is the tau=0 special case.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, out_ref, acc_ref, *, tau: float, block_t: int,
+            n_blocks: int, total_t: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                    # (bt, d)
+    rows = i * block_t + jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    valid = rows < total_t
+    if tau <= 0.0:
+        flags = (x == 0.0) & valid
+    else:
+        flags = (jnp.abs(x) < tau) & valid
+    acc_ref[...] = acc_ref[...] + jnp.sum(flags.astype(jnp.float32), axis=0)
+
+    @pl.when(i == n_blocks - 1)
+    def _emit():
+        out_ref[...] = acc_ref[...] / total_t
+
+
+def signature_td(x, *, tau: float = 0.05, block_t: int = 256,
+                 interpret: bool = True):
+    """x (T, d) -> per-channel zero-fraction (d,) f32."""
+    T, d = x.shape
+    bt = min(block_t, T)
+    n_blocks = -(-T // bt)
+    pad = n_blocks * bt - T
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)), constant_values=1.0)
+
+    kernel = functools.partial(_kernel, tau=tau, block_t=bt,
+                               n_blocks=n_blocks, total_t=T)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((bt, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,43 @@
+"""Production mesh builders.
+
+Functions (not module constants) so importing never touches jax device
+state.  Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod: (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis joins "data" for batch/FSDP sharding (DCN-side data parallelism).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, found {len(devices)}; the dry-run must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(dev, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many devices this host actually has (tests)."""
+    import jax
+    n = data * model
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline targets)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes / s per chip
+ICI_BW = 50e9                   # bytes / s per link

@@ -1,0 +1,8 @@
+from repro.models import transformer
+from repro.models.cnn import cnn_accuracy, cnn_forward, cnn_loss, init_cnn
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, loss_fn, prefill)
+
+__all__ = ["transformer", "init_params", "init_cache", "forward", "loss_fn",
+           "prefill", "decode_step", "init_cnn", "cnn_forward", "cnn_loss",
+           "cnn_accuracy"]

@@ -1,0 +1,81 @@
+"""VGG-family CNN for the paper-faithful reproduction (MNIST/CIFAR clients).
+
+Keeps the paper's Eq. 3 signature exactly: post-ReLU conv feature maps have
+true zeros, and ``signature_layer`` selects which conv output provides the
+zero-fraction 'kernel signatures' (one per output channel).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cnn import CNNConfig
+
+
+def init_cnn(key, cfg: CNNConfig):
+    params = {"convs": [], "fcs": []}
+    in_ch = cfg.in_channels
+    k = cfg.kernel_size
+    size = cfg.image_size
+    for stack in cfg.conv_stacks:
+        stack_params = []
+        for out_ch in stack:
+            key, sub = jax.random.split(key)
+            w = jax.random.normal(sub, (k, k, in_ch, out_ch), jnp.float32)
+            w = w * math.sqrt(2.0 / (k * k * in_ch))
+            stack_params.append({"w": w, "b": jnp.zeros((out_ch,), jnp.float32)})
+            in_ch = out_ch
+        params["convs"].append(stack_params)
+        size //= 2
+    d = in_ch * size * size
+    for out_d in cfg.fc_dims + (cfg.n_classes,):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (d, out_d), jnp.float32) * math.sqrt(2.0 / d)
+        params["fcs"].append({"w": w, "b": jnp.zeros((out_d,), jnp.float32)})
+        d = out_d
+    return params
+
+
+def cnn_forward(params, images, cfg: CNNConfig, want_signature: bool = False):
+    """images (B, H, W, C) -> (logits (B, n_classes), signature | None).
+
+    The signature is the paper's Eq. 3-4: per-channel zero fraction of the
+    ``signature_layer``-th conv feature map, averaged over the batch.
+    """
+    x = images
+    sig = None
+    conv_idx = 0
+    for stack_params in params["convs"]:
+        for p in stack_params:
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + p["b"])
+            if want_signature and conv_idx == cfg.signature_layer:
+                # zero(F_k(x)) / (H*W), averaged over samples (Eq. 3-4)
+                zero_frac = jnp.mean((x == 0.0).astype(jnp.float32), axis=(1, 2))
+                sig = jnp.mean(zero_frac, axis=0)            # (channels,)
+            conv_idx += 1
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    for p in params["fcs"][:-1]:
+        x = jax.nn.relu(x @ p["w"] + p["b"])
+    p = params["fcs"][-1]
+    return x @ p["w"] + p["b"], sig
+
+
+def cnn_loss(params, batch, cfg: CNNConfig, want_signature: bool = False):
+    logits, sig = cnn_forward(params, batch["images"], cfg, want_signature)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - ll)
+    return loss, {"signature": sig, "logits": logits}
+
+
+def cnn_accuracy(params, images, labels, cfg: CNNConfig):
+    logits, _ = cnn_forward(params, images, cfg)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

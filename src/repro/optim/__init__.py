@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adamw, apply_updates,
+                                    clip_by_global_norm, constant_schedule,
+                                    cosine_schedule, sgd, warmup_cosine)
+
+__all__ = ["Optimizer", "adamw", "sgd", "cosine_schedule", "warmup_cosine",
+           "constant_schedule", "clip_by_global_norm", "apply_updates"]

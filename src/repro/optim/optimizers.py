@@ -1,0 +1,146 @@
+"""Minimal optimizer library (optax is not installed in this container).
+
+``Optimizer`` is an (init, update) pair over pytrees, mirroring the optax
+GradientTransformation contract so swapping in optax later is mechanical.
+AdamW supports configurable moment dtype (bf16 moments for the 200B+ MoE
+archs — see ArchConfig.moment_dtype).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (grads, state, params) -> (updates, state)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step / max(total_steps, 1), 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        warm = lr * step / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# gradient clipping
+# ---------------------------------------------------------------------------
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# SGD / AdamW
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0):
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree_util.tree_map(
+                    lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+
+        def upd(g, p, mu=None):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if mu is not None:
+                mu_new = momentum * mu + g
+                return -lr_t * mu_new, mu_new
+            return -lr_t * g, None
+
+        if momentum == 0.0:
+            updates = jax.tree_util.tree_map(
+                lambda g, p: upd(g, p)[0], grads, params)
+            return updates, {"step": step}
+        pairs = jax.tree_util.tree_map(upd, grads, params, state["mu"])
+        updates = jax.tree_util.tree_map(lambda pr: pr[0], pairs,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda pr: pr[1], pairs,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"step": step, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype=jnp.float32):
+    sched = lr if callable(lr) else constant_schedule(lr)
+    moment_dtype = jnp.dtype(moment_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, moment_dtype)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, m_new.astype(moment_dtype), v_new.astype(moment_dtype)
+
+        triples = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                         params)
+        is_t = lambda x: isinstance(x, tuple)
+        updates = jax.tree_util.tree_map(lambda t: t[0], triples, is_leaf=is_t)
+        m = jax.tree_util.tree_map(lambda t: t[1], triples, is_leaf=is_t)
+        v = jax.tree_util.tree_map(lambda t: t[2], triples, is_leaf=is_t)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)

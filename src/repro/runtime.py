@@ -1,0 +1,27 @@
+"""Runtime knobs threaded through model apply functions."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+from typing import Any, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Runtime:
+    use_pallas: bool = False       # route hot-spots through Pallas kernels
+    pallas_interpret: bool = True  # CPU container: interpret mode
+    remat: bool = True             # checkpoint scanned periods in training
+    want_signature: bool = False   # emit DAG-AFL feature signature in aux
+    signature_tau: float = 0.05
+    signature_dims: int = 64
+    # activation sharding: constrain the residual stream's batch dim to these
+    # mesh axes (set by the launcher; None = no constraints, e.g. CPU tests)
+    batch_axes: Optional[Tuple[str, ...]] = None
+    batch_axis_size: int = 1
+    # mesh handle for shard_map regions (recurrent blocks move their weight-
+    # gradient reduction out of the timestep loop this way; see xlstm.py)
+    mesh: Optional[Any] = None
+
+
+DEFAULT = Runtime()

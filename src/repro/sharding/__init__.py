@@ -1,0 +1,7 @@
+from repro.sharding.rules import (MeshPlan, batch_shardings, cache_shardings,
+                                  opt_state_shardings, param_pspec,
+                                  param_shardings, replicated)
+
+__all__ = ["MeshPlan", "param_pspec", "param_shardings",
+           "opt_state_shardings", "batch_shardings", "cache_shardings",
+           "replicated"]

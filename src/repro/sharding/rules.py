@@ -1,0 +1,316 @@
+"""Path-based PartitionSpec rules: params, optimizer state, batches, caches.
+
+Strategy (see DESIGN.md §4):
+  - tensor parallel over ``model``: column-parallel projections shard their
+    output feature dim, row-parallel their input dim; attention projections
+    shard ONLY when the head count divides the axis (never split a head);
+    MoE experts shard the expert dim (expert parallelism); vocab shards the
+    embedding/unembed.
+  - FSDP over ``data`` (+ ``pod``): large leaves additionally shard a
+    non-TP dim when divisible (threshold ``fsdp_min_bytes``).
+  - anything non-divisible falls back to replication — the rules must never
+    produce an invalid NamedSharding for any (arch x mesh).
+
+Leaf names are the contract with ``repro.models`` init functions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    """Axis layout of the production mesh."""
+
+    batch_axes: Tuple[str, ...] = ("data",)    # ("pod","data") multi-pod
+    tp_axis: str = "model"
+    fsdp_axis = "data"                         # may be a tuple of axes
+    fsdp_min_bytes: int = 1 << 22              # 4 MiB
+    enable_fsdp: bool = True
+    enable_tp: bool = True                     # False: pure data parallelism
+    attn_tp: bool = True                       # False: replicate q/o (decode
+                                               # with non-shardable kv heads)
+    # serving: shard experts over data x model (2-D EP+TP) so no weight is
+    # ever re-gathered per decoded token (FSDP gathers are a train-time
+    # amortisation that decode cannot afford)
+    expert_data_shard: bool = False
+    # serving: additionally shard the embedding/unembed tables over the
+    # data axes (they are touched once per step; per-layer projections stay
+    # TP-only — XLA re-gathers contraction-sharded weights, measured worse)
+    dense_2d_shard: bool = False
+
+    def axis_size(self, mesh: Mesh, name) -> int:
+        if isinstance(name, tuple):
+            return int(np.prod([mesh.shape[a] for a in name]))
+        return mesh.shape[name]
+
+
+def small_model_plan(batch_axes: Tuple[str, ...], tp_axis: str,
+                     param_count: int) -> "MeshPlan":
+    """Beyond-baseline plan for small archs: TP off, batch over EVERY axis.
+
+    A 125M-2B model TP-sharded 16 ways pays per-layer (and for recurrent
+    blocks per-timestep) collectives worth orders of magnitude more than its
+    compute (observed: 61x on xlstm-125m train_4k).  Pure DP removes them;
+    FSDP over the combined axis keeps optimizer state per-chip bounded for
+    the >0.75B members."""
+    plan = MeshPlan(batch_axes=tuple(batch_axes) + (tp_axis,),
+                    enable_tp=False,
+                    enable_fsdp=param_count > 750_000_000)
+    object.__setattr__(plan, "_fsdp_axes", tuple(batch_axes) + (tp_axis,))
+    return plan
+
+
+# column-parallel (shard output dim -1), row-parallel (shard input dim -2)
+_COL = {"wq", "wk", "wv", "wi", "wg", "up_proj", "in_proj",
+        "wq_a", "wq_b", "wkv_b", "unembed"}
+_ROW = {"wo", "wdown", "down_proj", "out_proj", "dt_proj", "x_proj", "xwo"}
+_CROSS_COL = {"xwq", "xwk", "xwv"}
+_EXPERT = {"we_gate", "we_up", "we_down"}
+# sLSTM gate weights are REPLICATED: TP-sharding a per-timestep recurrence
+# inserts a collective every timestep (observed: 1.6 s collective term on a
+# 125M model).  w_if (mLSTM gates) is tiny; same treatment.
+_REPLICATE = {"scale", "bias", "bq", "bk", "bv", "b_if", "b_gates", "conv_w",
+              "conv_b", "dt_bias", "A_log", "D", "router", "wkv_a", "b",
+              "w_gates", "r_gates", "w_if"}
+
+# attention-projection leaves gated on head divisibility
+_Q_HEAD_LEAVES = {"wq", "xwq", "wq_b"}
+_KV_HEAD_LEAVES = {"wk", "wv", "xwk", "xwv"}
+_O_HEAD_LEAVES = {"wo", "xwo"}
+
+
+def _head_aligned(cfg: ArchConfig, name: str, tp: int) -> bool:
+    if cfg.mla is not None:
+        # MLA: wq_b/wkv_b/wo all carry n_heads; kv latents are replicated
+        return cfg.n_heads % tp == 0
+    if name in _Q_HEAD_LEAVES or name in _O_HEAD_LEAVES:
+        return cfg.n_heads % tp == 0
+    if name in _KV_HEAD_LEAVES:
+        return cfg.n_kv_heads % tp == 0
+    return True
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _in_module(path, module: str) -> bool:
+    return any(isinstance(e, jax.tree_util.DictKey) and str(e.key) == module
+               for e in path)
+
+
+def param_pspec(path, leaf, cfg: ArchConfig, mesh: Mesh, plan: MeshPlan) -> P:
+    name = _leaf_name(path)
+    nd = leaf.ndim
+    tp = plan.axis_size(mesh, plan.tp_axis) if plan.enable_tp else 1
+    fsdp_axis = getattr(plan, "_fsdp_axes", None) or plan.fsdp_axis
+    fsdp = plan.axis_size(mesh, fsdp_axis)
+    spec = [None] * nd
+
+    def try_assign(dim: int, axis, size: int) -> bool:
+        d = dim % nd
+        if spec[d] is None and leaf.shape[d] % size == 0 and size > 1:
+            spec[d] = axis
+            return True
+        return False
+
+    is_attn_leaf = (name in _Q_HEAD_LEAVES | _KV_HEAD_LEAVES | _O_HEAD_LEAVES
+                    or name in {"wkv_b"})
+    head_ok = _head_aligned(cfg, name, tp) and plan.attn_tp
+
+    if name == "embedding":
+        try_assign(-2, plan.tp_axis, tp)               # vocab over model
+        if plan.dense_2d_shard:                        # serving: 2-D table
+            baxes = tuple(plan.batch_axes)
+            try_assign(-1, baxes if len(baxes) > 1 else baxes[0],
+                       plan.axis_size(mesh, baxes))
+        return P(*spec)            # never FSDP the d dim of the lookup table
+    elif name in _EXPERT and nd >= 3:
+        if plan.expert_data_shard:
+            baxes = tuple(plan.batch_axes)
+            bsize = plan.axis_size(mesh, baxes)
+            if not try_assign(-3, baxes if len(baxes) > 1 else baxes[0], bsize):
+                try_assign(-3, plan.batch_axes[-1],
+                           plan.axis_size(mesh, plan.batch_axes[-1]))
+            # per-expert TP: col for up/gate, row for down
+            if name == "we_down":
+                try_assign(-2, plan.tp_axis, tp)
+            else:
+                try_assign(-1, plan.tp_axis, tp)
+            return P(*spec)
+        try_assign(-3, plan.tp_axis, tp)               # experts over model
+    elif name in _COL or name in _CROSS_COL:
+        if not is_attn_leaf or head_ok:
+            try_assign(-1, plan.tp_axis, tp)
+        if plan.dense_2d_shard and name == "unembed":
+            baxes = tuple(plan.batch_axes)
+            try_assign(-2, baxes if len(baxes) > 1 else baxes[0],
+                       plan.axis_size(mesh, baxes))
+            return P(*spec)
+    elif name in _ROW:
+        if not is_attn_leaf or head_ok:
+            try_assign(-2, plan.tp_axis, tp)
+    elif name in _REPLICATE:
+        pass
+
+    # FSDP over the data axis for big leaves, on a spare dim
+    if (plan.enable_fsdp and leaf.size * leaf.dtype.itemsize
+            >= plan.fsdp_min_bytes and nd >= 2):
+        for dim in (-2, -1, -3):
+            if abs(dim) <= nd and try_assign(dim, fsdp_axis, fsdp):
+                break
+    return P(*spec)
+
+
+def param_shardings(params, cfg: ArchConfig, mesh: Mesh,
+                    plan: Optional[MeshPlan] = None):
+    plan = plan or MeshPlan()
+
+    def spec(path, leaf):
+        return NamedSharding(mesh, param_pspec(path, leaf, cfg, mesh, plan))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def opt_state_shardings(opt_state, params_sh, mesh: Mesh):
+    """Adam m/v mirror the param shardings; step scalars replicate."""
+    flat_params = dict(jax.tree_util.tree_flatten_with_path(params_sh)[0])
+
+    def walk(state):
+        out = {}
+        for k, v in state.items():
+            if k == "step":
+                out[k] = NamedSharding(mesh, P())
+            else:
+                out[k] = jax.tree_util.tree_map_with_path(
+                    lambda path, leaf, _k=k: flat_params.get(
+                        tuple(path), NamedSharding(mesh, P())), v)
+        return out
+
+    # m/v have identical treedef to params => reuse specs by path
+    def mirror(path, leaf):
+        return flat_params.get(tuple(path), NamedSharding(mesh, P()))
+
+    out = {}
+    for k, v in opt_state.items():
+        if k == "step":
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = jax.tree_util.tree_map_with_path(mirror, v)
+    return out
+
+
+def batch_shardings(batch, mesh: Mesh, plan: Optional[MeshPlan] = None):
+    """tokens/labels (B, S): shard batch over the batch axes when divisible;
+    M-RoPE positions (3, B, S) shard dim 1."""
+    plan = plan or MeshPlan()
+    baxes = plan.batch_axes if len(plan.batch_axes) > 1 else plan.batch_axes[0]
+    bsize = plan.axis_size(mesh, tuple(plan.batch_axes))
+
+    def spec(path, leaf):
+        nd = leaf.ndim
+        bdim = 1 if (nd == 3 and leaf.shape[0] == 3) else 0
+        s = [None] * nd
+        if leaf.shape[bdim] % bsize == 0 and bsize > 1:
+            s[bdim] = baxes
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_shardings(cache, cfg: ArchConfig, mesh: Mesh,
+                    plan: Optional[MeshPlan] = None):
+    """KV caches (R, B, S, K, hd) / (R, B, S, r): batch over data when it
+    divides, otherwise SEQUENCE over data (long_500k batch=1 path); kv heads
+    over model when divisible."""
+    plan = plan or MeshPlan()
+    baxes = plan.batch_axes if len(plan.batch_axes) > 1 else plan.batch_axes[0]
+    bsize = plan.axis_size(mesh, tuple(plan.batch_axes))
+    tp_in_batch = plan.tp_axis in plan.batch_axes
+    tp = (plan.axis_size(mesh, plan.tp_axis)
+          if plan.enable_tp and not tp_in_batch else 1)
+
+    all_axes = (tuple(plan.batch_axes) if tp_in_batch
+                else tuple(plan.batch_axes) + (plan.tp_axis,))
+
+    def axis_prod(axes):
+        out = 1
+        for a in axes:
+            out *= mesh.shape[a]
+        return out
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        s = [None] * nd
+        if name in ("k", "v", "xk", "xv") and nd == 5:
+            R, B, S, K, hd = leaf.shape
+            kv_shardable = K % tp == 0 and tp > 1
+            if B % bsize == 0 and bsize > 1:
+                s[1] = baxes
+                if kv_shardable:
+                    s[3] = plan.tp_axis
+                elif S % tp == 0 and tp > 1:
+                    s[2] = plan.tp_axis
+            else:
+                # batch not fully shardable: try a leading subset of the
+                # batch axes for B, the rest for S (whisper cross-kv path),
+                # then pure sequence sharding (long_500k batch=1 path)
+                done = False
+                for i in range(len(plan.batch_axes) - 1, 0, -1):
+                    head = plan.batch_axes[:i]
+                    tail = plan.batch_axes[i:]
+                    if B % axis_prod(head) == 0 and axis_prod(head) > 1:
+                        s[1] = head if len(head) > 1 else head[0]
+                        if S % axis_prod(tail) == 0:
+                            s[2] = tail if len(tail) > 1 else tail[0]
+                        elif K % axis_prod(tail) == 0:
+                            s[3] = tail if len(tail) > 1 else tail[0]
+                        done = True
+                        break
+                if not done:
+                    if not kv_shardable and S % (bsize * tp) == 0:
+                        s[2] = all_axes
+                    elif S % bsize == 0 and bsize > 1:
+                        s[2] = baxes
+                        if kv_shardable:
+                            s[3] = plan.tp_axis
+        elif name in ("ckv", "krope") and nd == 4:
+            R, B, S, r = leaf.shape
+            if B % bsize == 0 and bsize > 1:
+                s[1] = baxes
+                if S % tp == 0 and tp > 1:
+                    s[2] = plan.tp_axis
+            elif S % (bsize * tp) == 0:
+                s[2] = all_axes
+            elif S % bsize == 0 and bsize > 1:
+                s[2] = baxes
+        else:
+            # recurrent states: (R, B, ...) batch over data when divisible
+            if nd >= 2 and leaf.shape[1] % bsize == 0 and bsize > 1:
+                s[1] = baxes
+            # shard the big inner dim of mamba/mlstm states over model
+            if nd >= 3 and leaf.shape[2] % tp == 0 and tp > 1 \
+                    and name in ("h", "C", "n", "conv"):
+                dim = 2 if name != "conv" else nd - 1
+                if leaf.shape[dim] % tp == 0:
+                    s[dim] = plan.tp_axis
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,57 @@
+"""Checkpointing: flat-key .npz snapshots of arbitrary pytrees.
+
+No orbax in this container; paths are keyed by their tree path so any
+params/opt_state tree round-trips exactly (dtypes included).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else f"[{p.idx}]" if isinstance(p, jax.tree_util.SequenceKey)
+            else str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: int = 0) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+    return path
+
+
+def load_checkpoint(path: str, like) -> Tuple[object, int]:
+    """Restore into the structure of ``like`` (values replaced by file's)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    step = int(data["__step__"]) if "__step__" in data else 0
+    flat = _flatten(like)
+    missing = [k for k in flat if k not in data.files]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+    values = {k: jnp.asarray(data[k]) for k in flat}
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    ordered = []
+    for path_k, leaf in leaves_like:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else f"[{p.idx}]" if isinstance(p, jax.tree_util.SequenceKey)
+            else str(p) for p in path_k)
+        ordered.append(values[key].astype(leaf.dtype).reshape(leaf.shape))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), ordered)
+    return tree, step

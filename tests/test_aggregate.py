@@ -1,0 +1,56 @@
+"""Aggregation (paper Eq. 6) + weighted/interpolated variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregate import (tree_interpolate, tree_mean,
+                                  tree_size_bytes, tree_weighted)
+
+
+def make_tree(v):
+    return {"a": jnp.full((3, 2), v, jnp.float32),
+            "b": [jnp.full((4,), 2 * v, jnp.float32)],
+            "n": jnp.asarray(7, jnp.int32)}       # non-float passes through
+
+
+def test_tree_mean_eq6():
+    out = tree_mean([make_tree(1.0), make_tree(3.0)])
+    assert np.allclose(out["a"], 2.0)
+    assert np.allclose(out["b"][0], 4.0)
+    assert out["n"] == 7
+
+
+def test_tree_weighted_normalises():
+    out = tree_weighted([make_tree(0.0), make_tree(1.0)], [1.0, 3.0])
+    assert np.allclose(out["a"], 0.75)
+
+
+def test_tree_interpolate():
+    out = tree_interpolate(make_tree(0.0), make_tree(1.0), 0.25)
+    assert np.allclose(out["a"], 0.25)
+
+
+def test_tree_size_bytes():
+    assert tree_size_bytes({"w": jnp.zeros((8,), jnp.float32)}) == 32
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3), min_size=2, max_size=6))
+def test_mean_matches_numpy(vals):
+    trees = [make_tree(v) for v in vals]
+    out = tree_mean(trees)
+    assert np.allclose(out["a"], np.mean(vals), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.floats(-10, 10), st.floats(0.01, 5)),
+                min_size=2, max_size=5))
+def test_weighted_is_convex_combination(pairs):
+    vals = [p[0] for p in pairs]
+    ws = [p[1] for p in pairs]
+    out = tree_weighted([make_tree(v) for v in vals], ws)
+    expect = np.sum(np.array(vals) * np.array(ws)) / np.sum(ws)
+    assert np.allclose(out["a"], expect, rtol=1e-4, atol=1e-4)
+    assert out["a"].min() >= min(vals) - 1e-4
+    assert out["a"].max() <= max(vals) + 1e-4

@@ -1,0 +1,109 @@
+"""DAG ledger: structure, tips, reachability (paper Alg. 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dag import DAGLedger, ModelStore, TxMetadata
+
+
+def meta(cid=0, epoch=0):
+    return TxMetadata(client_id=cid, signature=(0.1, 0.2),
+                      model_accuracy=0.5, current_epoch=epoch,
+                      validation_node_id=cid)
+
+
+def build_ledger():
+    led = DAGLedger()
+    led.add_genesis(meta(-1))
+    return led
+
+
+def test_genesis_is_tip():
+    led = build_ledger()
+    assert led.tips() == [led.genesis_id]
+
+
+def test_approval_consumes_tips():
+    led = build_ledger()
+    g = led.genesis_id
+    t1 = led.add_transaction(meta(0, 1), [g], 1.0)
+    assert led.tips() == [t1.tx_id]
+    t2 = led.add_transaction(meta(1, 1), [g], 1.5)   # g already approved: ok
+    assert set(led.tips()) == {t1.tx_id, t2.tx_id}
+    t3 = led.add_transaction(meta(2, 2), [t1.tx_id, t2.tx_id], 2.0)
+    assert led.tips() == [t3.tx_id]
+
+
+def test_unknown_parent_rejected():
+    led = build_ledger()
+    with pytest.raises(KeyError):
+        led.add_transaction(meta(), ["nope"], 1.0)
+
+
+def test_latest_of_client():
+    led = build_ledger()
+    g = led.genesis_id
+    a = led.add_transaction(meta(0, 1), [g], 1.0)
+    b = led.add_transaction(meta(0, 2), [a.tx_id], 2.0)
+    led.add_transaction(meta(1, 1), [g], 1.5)
+    assert led.latest_of(0) == b.tx_id
+    assert led.latest_of(99) is None
+
+
+def test_reachability_split():
+    """Tips descending from the client's node are reachable, others not."""
+    led = build_ledger()
+    g = led.genesis_id
+    mine = led.add_transaction(meta(0, 1), [g], 1.0)           # client 0
+    other = led.add_transaction(meta(1, 1), [g], 1.1)          # client 1
+    child = led.add_transaction(meta(2, 2), [mine.tx_id], 2.0)  # approves mine
+    lone = led.add_transaction(meta(3, 2), [other.tx_id], 2.1)
+    reach, unreach = led.reachable_tips(mine.tx_id)
+    assert reach == [child.tx_id]
+    assert unreach == [lone.tx_id]
+
+
+def test_reachability_no_start():
+    led = build_ledger()
+    g = led.genesis_id
+    led.add_transaction(meta(0, 1), [g], 1.0)
+    reach, unreach = led.reachable_tips(None)
+    assert reach == [] and len(unreach) == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 1)),
+                min_size=1, max_size=40))
+def test_reachable_plus_unreachable_is_all_tips(ops):
+    """Property: Alg. 1 partitions the tip set, for any random DAG."""
+    led = build_ledger()
+    rng = np.random.default_rng(0)
+    for cid, n_parents_extra in ops:
+        tips = led.tips()
+        k = min(len(tips), 1 + n_parents_extra)
+        parents = list(rng.choice(tips, size=k, replace=False))
+        led.add_transaction(meta(cid, 1), parents, float(len(led)))
+    for cid in range(10):
+        start = led.latest_of(cid)
+        reach, unreach = led.reachable_tips(start)
+        assert sorted(reach + unreach) == led.tips()
+        assert not (set(reach) & set(unreach))
+
+
+def test_dag_is_acyclic_by_construction():
+    """Parents must exist before children: timestamps strictly ordered back."""
+    led = build_ledger()
+    g = led.genesis_id
+    a = led.add_transaction(meta(0, 1), [g], 1.0)
+    b = led.add_transaction(meta(1, 2), [a.tx_id], 2.0)
+    for anc in led.ancestors(b.tx_id):
+        assert led.nodes[anc].timestamp < led.nodes[b.tx_id].timestamp
+
+
+def test_model_store_tracks_bytes():
+    import jax.numpy as jnp
+    store = ModelStore()
+    store.put("a", {"w": jnp.ones((4, 4), jnp.float32)})
+    assert "a" in store
+    store.get("a")
+    assert store.bytes_transferred == 64

@@ -1,0 +1,62 @@
+"""Dry-run machinery integration test on a small forced-device mesh.
+
+Runs in a subprocess so the 8-device XLA_FLAGS never pollutes the main test
+process (jax locks device count on first init).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, json, sys
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+sys.path.insert(0, "src")
+from repro.configs import get_config, reduced
+from repro.configs.base import InputShape
+from repro.launch import dryrun
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.sharding.rules import MeshPlan
+
+cfg = dataclasses.replace(
+    reduced(get_config("{arch}")), compute_dtype="bfloat16",
+    cache_dtype="bfloat16")
+shape = InputShape("test", {seq}, {batch}, "{mode}")
+mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+plan = MeshPlan()
+jitted, args = dryrun.build_step(cfg, shape, mesh, plan)
+with mesh:
+    compiled = jitted.lower(*args).compile()
+    cost = analyze_hlo(compiled.as_text())
+    mem = compiled.memory_analysis()
+print(json.dumps({{"flops": cost.flops, "bytes": cost.bytes,
+                   "coll": cost.collective_bytes,
+                   "temp": int(mem.temp_size_in_bytes)}}))
+"""
+
+
+@pytest.mark.parametrize("arch,mode,batch,seq", [
+    ("internlm2-1.8b", "train", 8, 64),
+    ("jamba-v0.1-52b", "train", 8, 64),
+    ("deepseek-v2-236b", "decode", 8, 128),
+    ("whisper-medium", "prefill", 8, 64),
+])
+def test_dryrun_small_mesh(arch, mode, batch, seq):
+    script = _SCRIPT.format(arch=arch, mode=mode, batch=batch, seq=seq)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["flops"] > 0
+    assert rec["bytes"] > 0
+    if mode == "train":
+        assert rec["coll"] > 0          # grad all-reduce must exist

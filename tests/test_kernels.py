@@ -1,0 +1,235 @@
+"""Per-kernel allclose vs the pure-jnp oracles: shape/dtype sweeps +
+hypothesis properties (interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.selective_scan import selective_scan_bsd
+from repro.kernels.signature import signature_td
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, H, K, S, hd, causal, window, softcap, dtype
+    (2, 4, 2, 256, 64, True, -1, 0.0, jnp.float32),
+    (1, 4, 4, 300, 32, True, 48, 0.0, jnp.float32),
+    (2, 2, 1, 128, 64, True, -1, 30.0, jnp.float32),
+    (1, 2, 2, 200, 64, False, -1, 0.0, jnp.float32),
+    (1, 8, 2, 256, 128, True, 128, 50.0, jnp.float32),
+    (2, 4, 2, 192, 64, True, -1, 0.0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,H,K,S,hd,causal,window,cap,dtype", FLASH_CASES)
+def test_flash_attention_matches_oracle(B, H, K, S, hd, causal, window, cap,
+                                        dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, K, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, K, S, hd), dtype)
+    out = flash_attention_bhsd(q, k, v, causal=causal, window=window,
+                               softcap=cap, block_q=64, block_k=64,
+                               interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                     softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_block_shape_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    outs = [flash_attention_bhsd(q, k, v, block_q=bq, block_k=bk,
+                                 interpret=True)
+            for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_flash_bshd_wrapper_layout():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 130, 4, 32))       # (B,S,H,hd)
+    k = jax.random.normal(ks[1], (2, 130, 2, 32))
+    v = jax.random.normal(ks[2], (2, 130, 2, 32))
+    out = ops.flash_attention(q, k, v, interpret=True)
+    expect = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+
+SCAN_CASES = [
+    (1, 64, 8, 4, 64),
+    (2, 100, 16, 8, 32),
+    (3, 37, 4, 2, 16),
+]
+
+
+@pytest.mark.parametrize("B,S,d_in,N,chunk", SCAN_CASES)
+def test_selective_scan_matches_oracle(B, S, d_in, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    x = jax.random.normal(ks[0], (B, S, d_in))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, d_in)))
+    A = -jnp.exp(jax.random.normal(ks[2], (d_in, N)) * 0.5)
+    Bc = jax.random.normal(ks[3], (B, S, N))
+    Cc = jax.random.normal(ks[4], (B, S, N))
+    h0 = jax.random.normal(ks[5], (B, d_in, N)) * 0.1
+    y, h = selective_scan_bsd(x, dt, A, Bc, Cc, h0, chunk=chunk,
+                              interpret=True)
+    ye, he = ref.selective_scan_seq_ref(x, dt, A, Bc, Cc, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(he),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_selective_scan_state_continuation():
+    """Scanning two halves with carried state == scanning the whole."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    B, S, d_in, N = 1, 80, 8, 4
+    x = jax.random.normal(ks[0], (B, S, d_in))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, d_in)))
+    A = -jnp.exp(jax.random.normal(ks[2], (d_in, N)) * 0.5)
+    Bc = jax.random.normal(ks[3], (B, S, N))
+    Cc = jax.random.normal(ks[4], (B, S, N))
+    h0 = jnp.zeros((B, d_in, N))
+    y_full, h_full = selective_scan_bsd(x, dt, A, Bc, Cc, h0, chunk=16,
+                                        interpret=True)
+    y1, h1 = selective_scan_bsd(x[:, :40], dt[:, :40], A, Bc[:, :40],
+                                Cc[:, :40], h0, chunk=16, interpret=True)
+    y2, h2 = selective_scan_bsd(x[:, 40:], dt[:, 40:], A, Bc[:, 40:],
+                                Cc[:, 40:], h1, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# signature
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 48),
+       st.floats(0.0, 0.5), st.integers(0, 2 ** 31 - 1))
+def test_signature_matches_oracle_property(T, d, tau, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (T, d))
+    x = jnp.where(jnp.abs(x) < 0.2, 0.0, x)
+    out = signature_td(x, tau=tau, block_t=32, interpret=True)
+    expect = ref.signature_ref(x, tau)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-6, atol=1e-6)
+    assert out.shape == (d,)
+    assert float(out.min()) >= 0.0 and float(out.max()) <= 1.0
+
+
+def test_signature_bucketing():
+    x = jnp.concatenate([jnp.zeros((10, 8)), jnp.ones((10, 8))], axis=1)
+    sig = ops.signature(x, tau=0.0, n_sig=2, interpret=True)
+    np.testing.assert_allclose(np.asarray(sig), [1.0, 0.0], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM recurrence kernel (R-resident, inference path)
+# ---------------------------------------------------------------------------
+
+SLSTM_CASES = [(2, 100, 32, 16), (1, 64, 16, 64), (3, 50, 8, 7)]
+
+
+@pytest.mark.parametrize("B,S,d,chunk", SLSTM_CASES)
+def test_slstm_kernel_matches_oracle(B, S, d, chunk):
+    from repro.kernels.slstm import slstm_scan_bsd
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    gx = jax.random.normal(ks[0], (B, S, 4 * d))
+    R = jax.random.normal(ks[1], (d, 4 * d)) * 0.05
+    zeros = jnp.zeros((B, d))
+    m0 = jnp.full((B, d), -1e30)
+    hs, st = slstm_scan_bsd(gx, R, zeros, zeros, zeros, m0, chunk=chunk,
+                            interpret=True)
+    hs_e, st_e = ref.slstm_scan_ref(gx, R, zeros, zeros, zeros, m0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_e),
+                               rtol=1e-5, atol=1e-5)
+    for a, b in zip(st, st_e):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_slstm_kernel_state_continuation():
+    from repro.kernels.slstm import slstm_scan_bsd
+    ks = jax.random.split(jax.random.PRNGKey(12), 2)
+    B, S, d = 1, 80, 16
+    gx = jax.random.normal(ks[0], (B, S, 4 * d))
+    R = jax.random.normal(ks[1], (d, 4 * d)) * 0.05
+    zeros = jnp.zeros((B, d))
+    m0 = jnp.full((B, d), -1e30)
+    hs_full, st_full = slstm_scan_bsd(gx, R, zeros, zeros, zeros, m0,
+                                      chunk=16, interpret=True)
+    h1, st1 = slstm_scan_bsd(gx[:, :40], R, zeros, zeros, zeros, m0,
+                             chunk=16, interpret=True)
+    h2, st2 = slstm_scan_bsd(gx[:, 40:], R, *st1, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(hs_full), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunkwise mLSTM kernel (matrix memory in VMEM)
+# ---------------------------------------------------------------------------
+
+MLSTM_CASES = [(2, 100, 2, 16, 24, 16), (1, 64, 4, 32, 32, 64),
+               (2, 50, 1, 8, 8, 13)]
+
+
+@pytest.mark.parametrize("B,S,H,dk,dv,chunk", MLSTM_CASES)
+def test_mlstm_kernel_matches_recurrent_oracle(B, S, H, dk, dv, chunk):
+    from repro.kernels.mlstm import mlstm_chunkwise_bshd
+    from repro.models.xlstm import mlstm_recurrent_ref
+    ks = jax.random.split(jax.random.PRNGKey(21), 5)
+    q = jax.random.normal(ks[0], (B, S, H, dk))
+    k = jax.random.normal(ks[1], (B, S, H, dk))
+    v = jax.random.normal(ks[2], (B, S, H, dv))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    st0 = {"C": jnp.zeros((B, H, dk, dv)), "n": jnp.zeros((B, H, dk)),
+           "m": jnp.full((B, H), -1e30)}
+    h1, _ = mlstm_chunkwise_bshd(q, k, v, ig, fg, chunk=chunk,
+                                 interpret=True)
+    h2, _ = mlstm_recurrent_ref(q, k, v, ig, fg, st0)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_kernel_matches_jax_chunkwise():
+    """Kernel == the model's lax.scan chunkwise path (same formulation)."""
+    from repro.kernels.mlstm import mlstm_chunkwise_bshd
+    from repro.models.xlstm import mlstm_chunkwise
+    ks = jax.random.split(jax.random.PRNGKey(22), 5)
+    B, S, H, dk, dv = 1, 96, 2, 16, 16
+    q = jax.random.normal(ks[0], (B, S, H, dk))
+    k = jax.random.normal(ks[1], (B, S, H, dk))
+    v = jax.random.normal(ks[2], (B, S, H, dv))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    st0 = {"C": jnp.zeros((B, H, dk, dv)), "n": jnp.zeros((B, H, dk)),
+           "m": jnp.full((B, H), -1e30)}
+    h1, _ = mlstm_chunkwise_bshd(q, k, v, ig, fg, chunk=32, interpret=True)
+    h2, _ = mlstm_chunkwise(q, k, v, ig, fg, st0, chunk=32)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,123 @@
+"""Optimizers, schedules, checkpointing, data pipeline."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (make_benchmark_dataset, partition_dirichlet,
+                        partition_iid, split_811, label_distribution)
+from repro.optim.optimizers import (adamw, apply_updates, clip_by_global_norm,
+                                    cosine_schedule, sgd, warmup_cosine)
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+
+def _optimize(opt, steps=200):
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(1.5)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"])) + jnp.square(p["b"])
+
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return float(loss(params))
+
+
+def test_sgd_momentum_converges():
+    assert _optimize(sgd(0.05, momentum=0.9)) < 1e-3
+
+
+def test_adamw_converges():
+    assert _optimize(adamw(0.1)) < 1e-3
+
+
+def test_adamw_bf16_moments():
+    opt = adamw(0.1, moment_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    assert _optimize(opt) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == 20.0
+    total = jnp.sqrt(jnp.sum(jnp.square(clipped["a"])))
+    assert float(total) <= 1.0 + 1e-5
+
+
+def test_schedules():
+    cos = cosine_schedule(1.0, 100, final_frac=0.1)
+    assert float(cos(0)) == 1.0
+    assert abs(float(cos(100)) - 0.1) < 1e-5
+    wc = warmup_cosine(1.0, 10, 100)
+    assert float(wc(5)) == 0.5
+    assert float(wc(10)) == 1.0
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nest": {"b": jnp.asarray([1, 2], jnp.int32)},
+            "lst": [jnp.asarray(2.5, jnp.float32)]}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save_checkpoint(path, tree, step=42)
+        restored, step = load_checkpoint(path, tree)
+    assert step == 42
+    assert np.allclose(restored["a"], tree["a"])
+    assert restored["nest"]["b"].dtype == jnp.int32
+    assert float(restored["lst"][0]) == 2.5
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_split_811():
+    ds = make_benchmark_dataset("mnist", n_samples=1000)
+    s = split_811(ds)
+    assert len(s["train"]) == 800 and len(s["val"]) == 100
+    assert len(s["test"]) == 100
+
+
+def test_iid_partition_balanced():
+    ds = make_benchmark_dataset("mnist", n_samples=1000)
+    parts = partition_iid(ds, 10)
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1000))
+def test_dirichlet_skew_increases_as_beta_drops(seed):
+    ds = make_benchmark_dataset("cifar10", n_samples=2000, seed=seed % 7)
+    n_classes = int(ds.y.max()) + 1
+
+    def skew(beta):
+        parts = partition_dirichlet(ds, 8, beta, seed=seed)
+        dist = label_distribution(parts, n_classes)
+        dist = dist / np.maximum(dist.sum(axis=1, keepdims=True), 1)
+        # mean max-class share: 1/n_classes (uniform) .. 1.0 (one class)
+        return float(np.mean(dist.max(axis=1)))
+
+    assert skew(0.05) > skew(100.0) - 0.05
+
+
+def test_dirichlet_no_empty_clients():
+    ds = make_benchmark_dataset("mnist", n_samples=500)
+    parts = partition_dirichlet(ds, 10, beta=0.05, seed=3)
+    assert all(len(p) >= 8 for p in parts)
+
+
+def test_datasets_are_learnable_and_distinct():
+    easy = make_benchmark_dataset("mnist", n_samples=400)
+    hard = make_benchmark_dataset("cifar100", n_samples=400)
+    assert int(hard.y.max()) + 1 > int(easy.y.max()) + 1
+    assert easy.x.shape[-1] == 1 and hard.x.shape[-1] == 3

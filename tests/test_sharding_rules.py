@@ -1,0 +1,105 @@
+"""Sharding rules: divisibility safety + layout intent, no devices needed."""
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import transformer as T
+from repro.sharding.rules import MeshPlan, param_pspec
+
+
+class FakeMesh(SimpleNamespace):
+    pass
+
+
+MESH = FakeMesh(shape={"data": 16, "model": 16})
+PLAN = MeshPlan()
+
+
+def _pspecs(cfg):
+    params = jax.eval_shape(
+        lambda k: T.init_params(k, cfg), jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: (path, leaf,
+                            param_pspec(path, leaf, cfg, MESH, PLAN)),
+        params)
+
+
+def _axis_size(entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(jnp.prod(jnp.asarray([MESH.shape[a] for a in entry])))
+    return MESH.shape[entry]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_pspecs_always_divisible(arch):
+    cfg = get_config(arch)
+    triples = jax.tree_util.tree_leaves(
+        _pspecs(cfg), is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    assert triples
+    for path, leaf, spec in triples:
+        for dim, entry in enumerate(spec):
+            size = _axis_size(entry)
+            assert leaf.shape[dim] % size == 0, (arch, path, leaf.shape, spec)
+
+
+def test_gqa_kv_replicated_when_not_divisible():
+    cfg = get_config("qwen2-7b")                 # 4 kv heads < 16
+    triples = jax.tree_util.tree_leaves(
+        _pspecs(cfg), is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    for path, leaf, spec in triples:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in ("wk", "wv"):
+            assert "model" not in [s for s in spec if isinstance(s, str)], \
+                (path, spec)
+        if name in ("wi", "wg"):                 # MLP still TP-sharded
+            assert spec[-1] == "model"
+
+
+def test_small_heads_replicate_attention():
+    cfg = get_config("gemma2-2b")                # 8 q heads < 16
+    triples = jax.tree_util.tree_leaves(
+        _pspecs(cfg), is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    for path, leaf, spec in triples:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in ("wq", "wo"):
+            flat = [s for s in spec if isinstance(s, str)]
+            assert "model" not in flat
+
+
+def test_experts_sharded_over_model():
+    cfg = get_config("deepseek-v2-236b")         # 160 experts
+    triples = jax.tree_util.tree_leaves(
+        _pspecs(cfg), is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    seen = False
+    for path, leaf, spec in triples:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name.startswith("we_"):
+            assert spec[-3] == "model", (path, spec)
+            seen = True
+    assert seen
+
+
+def test_slstm_recurrent_weights_replicated():
+    cfg = get_config("xlstm-125m")
+    triples = jax.tree_util.tree_leaves(
+        _pspecs(cfg), is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    for path, leaf, spec in triples:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in ("w_gates", "r_gates", "w_if"):
+            assert all(s is None or s == "data" for s in spec), (path, spec)
+
+
+def test_embedding_never_fsdp_on_d():
+    cfg = get_config("internlm2-1.8b")
+    triples = jax.tree_util.tree_leaves(
+        _pspecs(cfg), is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    for path, leaf, spec in triples:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name == "embedding":
+            assert spec[-1] is None

@@ -1,0 +1,49 @@
+"""Eq. 3-5: signatures, cosine similarity, and the similarity contract."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.signature import (SimilarityContract, cosine_similarity,
+                                  cosine_similarity_matrix)
+from repro.models.layers import activation_signature
+
+
+def test_cosine_similarity_basics():
+    a = jnp.asarray([1.0, 0.0])
+    assert float(cosine_similarity(a, a)) == pytest.approx(1.0)
+    assert float(cosine_similarity(a, jnp.asarray([0.0, 1.0]))) == \
+        pytest.approx(0.0, abs=1e-6)
+    assert float(cosine_similarity(a, -a)) == pytest.approx(-1.0)
+
+
+def test_similarity_matrix_symmetric_unit_diag():
+    sigs = jnp.asarray([[1.0, 0.0], [0.5, 0.5], [0.0, 1.0]])
+    m = np.asarray(cosine_similarity_matrix(sigs))
+    assert np.allclose(m, m.T, atol=1e-6)
+    assert np.allclose(np.diag(m), 1.0, atol=1e-6)
+
+
+def test_contract_round_queries():
+    c = SimilarityContract(4)
+    c.post_signature(0, np.array([1.0, 0.0]))
+    c.post_signature(1, np.array([0.9, 0.1]))
+    c.post_signature(2, np.array([0.0, 1.0]))
+    assert c.commit_round(0) is not None
+    row = c.query(0, 0)
+    assert row[1] > row[2]          # client 1 more similar to 0 than 2
+    assert c.query(5, 0) is not None   # latest round <= 5
+    assert c.most_similar(0, 0, [1, 2], p=1) == [1]
+
+
+def test_contract_before_any_round():
+    c = SimilarityContract(4)
+    assert c.query(0, 0) is None
+    assert c.most_similar(0, 0, [1, 2], p=1) == [1]   # passthrough
+
+
+def test_activation_signature_properties():
+    h = jnp.concatenate([jnp.zeros((5, 10, 32)),
+                         jnp.ones((5, 10, 32))], axis=-1)
+    sig = activation_signature(h, n_sig=2, tau=0.05)
+    assert sig.shape == (2,)
+    np.testing.assert_allclose(np.asarray(sig), [1.0, 0.0], atol=1e-6)

@@ -1,0 +1,71 @@
+"""Event loop ordering + convergence tracking + client profiles."""
+import numpy as np
+
+from repro.core.simulator import (ClientProfile, ConvergenceTracker, CostModel,
+                                  EventLoop, make_profiles)
+
+
+def test_event_order():
+    loop = EventLoop()
+    seen = []
+    loop.schedule(2.0, lambda: seen.append("b"))
+    loop.schedule(1.0, lambda: seen.append("a"))
+    loop.schedule(3.0, lambda: seen.append("c"))
+    loop.run()
+    assert seen == ["a", "b", "c"]
+    assert loop.now == 3.0
+
+
+def test_nested_scheduling():
+    loop = EventLoop()
+    seen = []
+
+    def first():
+        seen.append(loop.now)
+        loop.schedule(1.5, lambda: seen.append(loop.now))
+
+    loop.schedule(1.0, first)
+    loop.run()
+    assert seen == [1.0, 2.5]
+
+
+def test_stop_predicate():
+    loop = EventLoop()
+    count = []
+    for i in range(10):
+        loop.schedule(float(i), lambda: count.append(1))
+    loop.run(stop=lambda: len(count) >= 3)
+    assert len(count) == 3
+
+
+def test_tracker_patience():
+    tr = ConvergenceTracker(patience=3)
+    assert not tr.update(1.0, 0.5)
+    assert not tr.update(2.0, 0.6)
+    assert not tr.update(3.0, 0.6)      # stale 1
+    assert not tr.update(4.0, 0.6)      # stale 2
+    assert tr.update(5.0, 0.6)          # stale 3 -> converged
+    assert tr.converged_at == 5.0
+    assert tr.best == 0.6
+
+
+def test_tracker_target():
+    tr = ConvergenceTracker(target_accuracy=0.9, patience=50)
+    assert not tr.update(1.0, 0.5)
+    assert tr.update(2.0, 0.95)
+    assert tr.converged_at == 2.0
+
+
+def test_profiles_heterogeneity():
+    fast = make_profiles(200, heterogeneity=0.1, seed=0)
+    slow = make_profiles(200, heterogeneity=1.2, seed=0)
+    assert np.std([p.speed for p in slow]) > np.std([p.speed for p in fast])
+
+
+def test_cost_model_scales_with_profile():
+    cm = CostModel()
+    rng = np.random.default_rng(0)
+    p_fast = ClientProfile(0, speed=0.5, bandwidth=1e8, latency=0.01)
+    p_slow = ClientProfile(1, speed=2.0, bandwidth=1e6, latency=0.01)
+    assert cm.train_time(p_slow, 5, rng) > cm.train_time(p_fast, 5, rng)
+    assert cm.transfer_time(p_slow, 10**7) > cm.transfer_time(p_fast, 10**7)

@@ -1,0 +1,124 @@
+"""Tip selection (paper §III-B): freshness, lambda split, similarity filter."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.dag import DAGLedger, TxMetadata
+from repro.core.signature import SimilarityContract
+from repro.core.tip_selection import (TipSelectionConfig, freshness,
+                                      select_tips, tipc)
+
+
+def meta(cid, epoch, sig=(1.0, 0.0)):
+    return TxMetadata(client_id=cid, signature=sig, model_accuracy=0.5,
+                      current_epoch=epoch, validation_node_id=cid)
+
+
+def test_tipc_eq1():
+    assert tipc(3, 3) == 1.0
+    assert tipc(5, 3) == pytest.approx(math.exp(-2))
+    assert tipc(3, 5) == pytest.approx(math.exp(-2))
+
+
+def test_freshness_prose_semantics():
+    """Default Eq.2: decays with both epoch gap and dwell time."""
+    f_now = freshness(2, 2, now=10.0, tip_time=10.0, alpha=0.1)
+    f_old = freshness(2, 2, now=10.0, tip_time=0.0, alpha=0.1)
+    f_gap = freshness(5, 2, now=10.0, tip_time=10.0, alpha=0.1)
+    assert f_now == pytest.approx(1.0)
+    assert f_old < f_now
+    assert f_gap < f_now
+
+
+def test_freshness_literal_eq2_is_inverted():
+    """The printed formula increases with dwell time (the paper's typo)."""
+    f_new = freshness(2, 2, 10.0, 10.0, 0.1, literal_eq2=True)
+    f_old = freshness(2, 2, 10.0, 0.0, 0.1, literal_eq2=True)
+    assert f_old > f_new
+
+
+def _setup(n_other=4):
+    led = DAGLedger()
+    led.add_genesis(meta(-1, 0))
+    g = led.genesis_id
+    mine = led.add_transaction(meta(0, 1), [g], 1.0)
+    reach_tip = led.add_transaction(meta(1, 2), [mine.tx_id], 2.0)
+    unreach = [led.add_transaction(meta(2 + i, 2), [g], 2.0 + 0.1 * i)
+               for i in range(n_other)]
+    return led, mine, reach_tip, unreach
+
+
+def test_lambda_split():
+    led, mine, reach_tip, unreach = _setup()
+    accs = {t.tx_id: 0.5 + 0.01 * i for i, t in enumerate(unreach)}
+    accs[reach_tip.tx_id] = 0.9
+    chosen = select_tips(led, 0, 2, 3.0, lambda t: accs.get(t, 0.1), None,
+                         TipSelectionConfig(n_select=2, lam=0.5))
+    kinds = sorted(c.reachable for c in chosen)
+    assert kinds == [False, True]          # one reachable + one unreachable
+    assert any(c.tx_id == reach_tip.tx_id for c in chosen)
+
+
+def test_similarity_filter_reduces_evaluations():
+    led, mine, reach_tip, unreach = _setup(n_other=6)
+    contract = SimilarityContract(10)
+    contract.post_signature(0, np.array([1.0, 0.0]))
+    for i in range(6):
+        sig = [1.0, 0.1 * i]               # client 2 most similar to client 0
+        contract.post_signature(2 + i, np.array(sig))
+    contract.commit_round(0)
+
+    evals = []
+    cfg = TipSelectionConfig(n_select=2, lam=0.5, p_similar=2)
+    select_tips(led, 0, 2, 3.0, lambda t: (evals.append(t) or 0.5),
+                contract, cfg)
+    # reachable side evaluates 1 tip; unreachable side only p=2 of 6
+    assert len(evals) <= 3
+
+
+def test_no_similarity_evaluates_all_candidates():
+    led, mine, reach_tip, unreach = _setup(n_other=6)
+    evals = []
+    cfg = TipSelectionConfig(n_select=2, lam=0.5, use_similarity=False)
+    select_tips(led, 0, 2, 3.0, lambda t: (evals.append(t) or 0.5), None, cfg)
+    assert len(evals) == 7                 # 1 reachable + all 6 unreachable
+
+
+def test_small_dag_returns_everything():
+    led = DAGLedger()
+    led.add_genesis(meta(-1, 0))
+    chosen = select_tips(led, 0, 0, 0.0, lambda t: 0.5, None,
+                         TipSelectionConfig(n_select=2))
+    assert len(chosen) == 1               # only genesis exists
+
+
+def test_first_round_client_all_unreachable():
+    led, mine, reach_tip, unreach = _setup()
+    chosen = select_tips(led, 77, 0, 3.0, lambda t: 0.5, None,
+                         TipSelectionConfig(n_select=2))
+    assert len(chosen) == 2
+    assert all(not c.reachable for c in chosen)
+
+
+def test_never_selects_own_transactions():
+    """A client's own tips are excluded (P2P-fetching yourself silos
+    training; see tip_selection.py note)."""
+    led = DAGLedger()
+    led.add_genesis(meta(-1, 0))
+    g = led.genesis_id
+    mine = led.add_transaction(meta(0, 1), [g], 1.0)          # client 0's tip
+    other = led.add_transaction(meta(1, 1), [g], 1.1)
+    chosen = select_tips(led, 0, 1, 2.0, lambda t: 0.5, None,
+                         TipSelectionConfig(n_select=2))
+    assert mine.tx_id not in {c.tx_id for c in chosen}
+    assert other.tx_id in {c.tx_id for c in chosen}
+
+
+def test_own_tip_used_when_alone():
+    led = DAGLedger()
+    led.add_genesis(meta(-1, 0))
+    mine = led.add_transaction(meta(0, 1), [led.genesis_id], 1.0)
+    chosen = select_tips(led, 0, 1, 2.0, lambda t: 0.5, None,
+                         TipSelectionConfig(n_select=2))
+    assert chosen and chosen[0].tx_id == mine.tx_id
