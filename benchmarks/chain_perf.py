@@ -1,13 +1,23 @@
-"""Paper Fig. 3: ledger throughput (TPS) and latency vs client count.
+"""Paper Fig. 3: ledger throughput (TPS) and latency vs client count —
+plus the cohort execution engine's wall-clock speedup benchmark.
 
-Micro-benchmarks the actual DAG ledger implementation: 'upload' = append a
-metadata transaction + tip-set maintenance; 'query' = tip listing + BFS
-reachability + metadata fetch.  A linear-chain ledger with FULL-MODEL
+Ledger micro-benchmarks exercise the actual DAG implementation: 'upload' =
+append a metadata transaction + tip-set maintenance; 'query' = tip listing +
+BFS reachability + metadata fetch.  A linear-chain ledger with FULL-MODEL
 payloads (BlockFL-style) is the comparison — the paper's point is that
 metadata-only DAG uploads dominate it.
+
+``--cohort-size K`` instead measures the vectorized cohort engine: one
+DAG-AFL run with the sequential per-client execution path vs the same run
+with K-client vmapped cohort dispatch (see ``repro/fl/cohort.py``), same
+simulated-time semantics, wall-clock compared.  Both paths get a one-round
+warm-up so XLA compilation is excluded from the measurement (steady-state
+throughput is the quantity of interest — a production simulator is
+long-running).
 """
 from __future__ import annotations
 
+import argparse
 import hashlib
 import json
 import os
@@ -78,6 +88,90 @@ def bench_linear_chain(n_clients: int, n_tx: int = 300,
     }
 
 
+def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
+                         n_samples: int = 6000, max_rounds: int = 2,
+                         local_epochs: int = 2, cohort_window: float = 2.0,
+                         seed: int = 0, warmup: bool = True
+                         ) -> Dict[str, float]:
+    """Wall-clock: sequential DAG-AFL vs the K-client cohort engine.
+
+    Same backend, same data, same simulated-cost model and seed; the only
+    difference is the execution engine.  Reports wall seconds, speedup, and
+    both runs' final accuracy (the engines must agree on learning outcome,
+    not just on speed).
+    """
+    import jax  # noqa: F401  (ensures backend selected before timing)
+
+    from repro.configs.cnn import vgg_for
+    from repro.core.coordinator import DagAflConfig, DagAflCoordinator
+    from repro.core.simulator import CostModel, make_profiles
+    from repro.core.tip_selection import TipSelectionConfig
+    from repro.data import (make_benchmark_dataset, partition_dirichlet,
+                            split_811)
+    from repro.fl.backend import CNNBackend
+    from repro.fl.cohort import CohortBackend
+
+    ds = make_benchmark_dataset("mnist", n_samples=n_samples, seed=seed)
+    splits = split_811(ds)
+    parts = partition_dirichlet(splits["train"], n_clients, beta=1.0,
+                                seed=seed)
+    client_data = []
+    for p in parts:
+        s = split_811(p, seed=seed + 1)
+        client_data.append({"train": s["train"], "val": s["val"],
+                            "test": s["test"]})
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=local_epochs,
+                         batch_size=32)
+    engine = CohortBackend(backend, capacity=cohort_size)
+    profiles = make_profiles(n_clients, 0.5, seed)
+
+    def run(csize, rounds, eng):
+        cfg = DagAflConfig(n_clients=n_clients, max_rounds=rounds,
+                           local_epochs=local_epochs,
+                           tip=TipSelectionConfig(n_select=2), seed=seed,
+                           cohort_size=csize, cohort_window=cohort_window)
+        coord = DagAflCoordinator(backend, client_data, splits["test"], cfg,
+                                  CostModel(local_epoch=2.0), profiles,
+                                  cohort_engine=eng)
+        t0 = time.perf_counter()
+        res = coord.run()
+        return time.perf_counter() - t0, res
+
+    if warmup:
+        # compile both paths out of the timing with a full-geometry clone:
+        # a shorter warm-up run forms different cohort-size buckets and
+        # leaves some programs to compile inside the measured region
+        run(1, max_rounds, None)
+        run(cohort_size, max_rounds, engine)
+
+    t_seq, res_seq = run(1, max_rounds, None)
+    t_coh, res_coh = run(cohort_size, max_rounds, engine)
+    return {
+        "seq_wall_s": t_seq,
+        "cohort_wall_s": t_coh,
+        "speedup": t_seq / max(t_coh, 1e-9),
+        "seq_accuracy": res_seq.final_accuracy,
+        "cohort_accuracy": res_coh.final_accuracy,
+        "accuracy_gap": abs(res_seq.final_accuracy
+                            - res_coh.final_accuracy),
+        "seq_sim_time": res_seq.sim_time,
+        "cohort_sim_time": res_coh.sim_time,
+        "rounds": res_coh.rounds,
+        "cohorts_dispatched": res_coh.extra["cohorts_dispatched"],
+    }
+
+
+def cohort_rows(result: Dict[str, float], n_clients: int,
+                cohort_size: int) -> list:
+    tag = f"n{n_clients}_k{cohort_size}"
+    return [
+        f"cohort_speedup[{tag}],"
+        f"{result['cohort_wall_s']*1e6:.0f},{result['speedup']:.2f}",
+        f"cohort_acc_gap[{tag}],"
+        f"{result['seq_wall_s']*1e6:.0f},{result['accuracy_gap']*100:.2f}",
+    ]
+
+
 def run_chain_perf(out_dir: str = "experiments/fl"):
     os.makedirs(out_dir, exist_ok=True)
     results = {}
@@ -97,3 +191,40 @@ def rows(results):
         out.append(f"fig3_query_tps[{name}],"
                    f"{r['query_latency_ms']*1e3:.1f},{r['query_tps']:.0f}")
     return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="measure the cohort engine at this batch size "
+                         "(0 = ledger micro-benchmarks only)")
+    ap.add_argument("--n-clients", type=int, default=16)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke geometry (small data, one round)")
+    ap.add_argument("--out-dir", default="experiments/fl")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if args.cohort_size:
+        kw = dict(n_samples=1500, max_rounds=1, local_epochs=1) \
+            if args.quick else {}
+        res = bench_cohort_speedup(n_clients=args.n_clients,
+                                   cohort_size=args.cohort_size, **kw)
+        for r in cohort_rows(res, args.n_clients, args.cohort_size):
+            print(r)
+        print(f"# sequential {res['seq_wall_s']:.1f}s "
+              f"(acc {res['seq_accuracy']:.3f}) vs cohort "
+              f"{res['cohort_wall_s']:.1f}s (acc {res['cohort_accuracy']:.3f})"
+              f" -> {res['speedup']:.2f}x, "
+              f"{res['cohorts_dispatched']} cohorts")
+        os.makedirs(args.out_dir, exist_ok=True)
+        with open(os.path.join(args.out_dir, "cohort_speedup.json"),
+                  "w") as f:
+            json.dump(res, f, indent=2)
+    else:
+        for r in rows(run_chain_perf(args.out_dir)):
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

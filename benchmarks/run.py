@@ -20,6 +20,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip-fl", action="store_true",
                     help="only ledger + roofline benchmarks")
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="also benchmark the vectorized cohort engine at "
+                         "this batch size (cohort_speedup[...] rows)")
+    ap.add_argument("--n-clients", type=int, default=16,
+                    help="client count for the cohort engine benchmark")
     args = ap.parse_args()
 
     rows = []
@@ -27,6 +32,14 @@ def main() -> None:
     from benchmarks import chain_perf
     chain_results = chain_perf.run_chain_perf()
     rows += chain_perf.rows(chain_results)
+
+    if args.cohort_size:
+        res = chain_perf.bench_cohort_speedup(
+            n_clients=args.n_clients, cohort_size=args.cohort_size)
+        rows += chain_perf.cohort_rows(res, args.n_clients, args.cohort_size)
+        print(f"# cohort engine: {res['speedup']:.2f}x wall-clock, "
+              f"accuracy gap {res['accuracy_gap']*100:.2f} pts",
+              file=sys.stderr)
 
     from benchmarks import roofline
     records = roofline.load()

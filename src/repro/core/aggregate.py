@@ -36,6 +36,59 @@ def tree_weighted(models: Sequence, weights: Sequence[float]):
     return jax.tree_util.tree_map(combine, *models)
 
 
+# -- stacked-tree variants (leading client axis) ----------------------------
+#
+# The cohort execution engine keeps K client models stacked as ONE pytree
+# whose leaves carry a leading client axis.  Aggregating over that axis is a
+# single XLA reduction instead of K Python-level ``tree_mean`` calls.
+
+
+def tree_stack(models: Sequence):
+    """Stack K congruent pytrees into one with a leading K axis per leaf."""
+    return jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *models)
+
+
+def tree_unstack(stacked) -> list:
+    """Inverse of :func:`tree_stack`: split the leading axis back out."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    n = leaves[0].shape[0]
+    return [jax.tree_util.tree_unflatten(treedef, [leaf[i] for leaf in leaves])
+            for i in range(n)]
+
+
+@jax.jit
+def stacked_mean(stacked):
+    """Eq. 6 over a stacked tree: mean over the leading client axis."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.mean(leaf.astype(jnp.float32), axis=0)
+        if jnp.issubdtype(leaf.dtype, jnp.floating) else leaf[0], stacked)
+
+
+def stacked_weighted(stacked, weights):
+    """Weighted aggregation over a stacked tree's leading axis M.
+
+    ``weights`` of shape (M,) produces one aggregate tree;  shape (K, M)
+    produces a stacked tree of K aggregates in one einsum per leaf — the
+    cohort path's "aggregate every client's tip selection at once", where
+    row k holds client k's (normalised) weights over the M stacked models.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
+    batched = w.ndim == 2
+
+    def combine(leaf):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            if batched:
+                return jnp.broadcast_to(leaf[0], w.shape[:1] + leaf.shape[1:])
+            return leaf[0]
+        f = leaf.astype(jnp.float32)
+        if batched:
+            return jnp.einsum("km,m...->k...", w, f)
+        return jnp.einsum("m,m...->...", w, f)
+
+    return jax.tree_util.tree_map(combine, stacked)
+
+
 @jax.jit
 def tree_interpolate(a, b, alpha: float):
     """FedAsync-style mixing: (1-alpha)*a + alpha*b."""

@@ -9,6 +9,26 @@ asynchronous loop:
 
 The publisher only bootstraps (genesis), audits (hash verification) and
 monitors convergence — it never trains, matching the paper.
+
+Execution engines
+-----------------
+``cohort_size=1`` (default) runs every client round as its own sequence of
+jitted calls — the reference path.  ``cohort_size=K`` drains the event heap
+in *cohort windows*: round-start events whose start times fall within
+``cohort_window`` simulated seconds of the window opener are dispatched as
+ONE ``jax.vmap``-batched program over the stacked K-client pytree
+(:class:`repro.fl.cohort.CohortBackend`).  Each result is still published to
+the DAG at its own simulated completion time (clamped to the window's flush
+time in the degenerate case of a round shorter than the window — keep
+``cohort_window`` below the typical round duration), so simulated-time
+semantics — the paper's Table III measurement substrate — are unchanged.
+The only relaxation is bounded tip staleness: a batched round's tip
+selection may
+observe the DAG up to ``cohort_window`` simulated seconds away from its own
+start (never beyond the window), the same semi-async relaxation DAG-AFL is
+built to tolerate — its whole premise is clients acting on slightly stale
+tips.  Training, validation and signature extraction for the window then
+run as single batched dispatches, which is where the wall-clock win lives.
 """
 from __future__ import annotations
 
@@ -17,11 +37,13 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.aggregate import tree_mean, tree_size_bytes
+from repro.core.aggregate import (stacked_weighted, tree_mean,
+                                  tree_size_bytes, tree_stack, tree_unstack)
 from repro.core.dag import DAGLedger, ModelStore, TxMetadata
 from repro.core.signature import SimilarityContract
-from repro.core.simulator import (ClientProfile, ConvergenceTracker, CostModel,
-                                  EventLoop, RunResult, make_profiles)
+from repro.core.simulator import (ClientProfile, CohortWindow,
+                                  ConvergenceTracker, CostModel, EventLoop,
+                                  RunResult, make_profiles)
 from repro.core.tip_selection import TipSelectionConfig, select_tips
 from repro.core.verify import extract_path, verify_path
 
@@ -37,14 +59,24 @@ class DagAflConfig:
     heterogeneity: float = 0.6
     verify_paths: bool = True         # trainers audit their stored paths
     seed: int = 0
+    # vectorized execution: batch up to this many concurrent client rounds
+    # into one vmapped program (1 = sequential reference path)
+    cohort_size: int = 1
+    # round starts within this many simulated seconds share a cohort window;
+    # keep it below the typical round duration — a publish whose completion
+    # time falls before the window flushes is clamped to the flush time
+    cohort_window: float = 1.0
 
 
 class DagAflCoordinator:
     def __init__(self, backend, client_data: List[Dict], global_test,
                  cfg: DagAflConfig, cost: Optional[CostModel] = None,
-                 profiles: Optional[List[ClientProfile]] = None):
+                 profiles: Optional[List[ClientProfile]] = None,
+                 cohort_engine=None):
         """client_data[k]: {"train": ..., "val": ..., "test": ...} per client
-        (backend-specific containers)."""
+        (backend-specific containers).  ``cohort_engine`` lets callers reuse
+        one compiled :class:`repro.fl.cohort.CohortBackend` across runs
+        (jit caches live on the engine instance)."""
         self.backend = backend
         self.client_data = client_data
         self.global_test = global_test
@@ -65,6 +97,24 @@ class DagAflCoordinator:
         self._evals_total = 0
         self._verify_failures = 0
         self._rounds_done = 0
+        self._cohorts_dispatched = 0
+        self._val_sets = [client_data[c]["val"] for c in range(cfg.n_clients)]
+        self.cohort = None
+        self._window: Optional[CohortWindow] = None
+        if cfg.cohort_size > 1:
+            from repro.fl.cohort import CohortBackend
+            if cohort_engine is not None:
+                self.cohort = cohort_engine
+            elif CohortBackend.supports(backend):
+                self.cohort = CohortBackend(backend,
+                                            capacity=cfg.cohort_size)
+            if self.cohort is not None:
+                self.cohort.register_shards(
+                    [client_data[c]["train"] for c in range(cfg.n_clients)],
+                    epochs=cfg.local_epochs)
+                self._window = CohortWindow(
+                    self.loop, cfg.cohort_size, cfg.cohort_window,
+                    self._flush_cohort, lambda: self.tracker.done)
 
     # -- helpers -------------------------------------------------------------
 
@@ -76,6 +126,20 @@ class DagAflCoordinator:
             self._acc_cache[key] = acc
             self._evals_total += 1
         return self._acc_cache[key]
+
+    def _evaluate_tips_batch(self, client: int, tx_ids) -> None:
+        """Validate every uncached candidate in ONE vmapped dispatch; the
+        per-tip ``_evaluate_tip`` then serves from the warmed cache."""
+        missing = [t for t in tx_ids if (client, t) not in self._acc_cache]
+        if not missing:
+            return
+        models = [self.store.get(self.ledger.nodes[t].model_ref)
+                  for t in missing]
+        accs = self.cohort.evaluate_many(models,
+                                         self.client_data[client]["val"])
+        for t, acc in zip(missing, accs):
+            self._acc_cache[(client, t)] = acc
+            self._evals_total += 1
 
     def _publish(self, client: int, model, accuracy: float, sig, epoch: int,
                  parents) -> None:
@@ -89,26 +153,60 @@ class DagAflCoordinator:
         self.contract.post_signature(client, sig)
         self.contract.commit_round(epoch)
 
-    # -- client round ---------------------------------------------------------
+    def _eval_global_on_vals(self, gm) -> List[float]:
+        if self.cohort is not None:
+            return self.cohort.evaluate_shared(gm, self._val_sets)
+        return [self.backend.evaluate(gm, self.client_data[c]["val"])
+                for c in range(self.cfg.n_clients)]
 
-    def _client_round(self, client: int) -> None:
-        if self.tracker.done:
-            return
+    def _start_round(self, delay: float, client: int) -> None:
+        if self._window is not None:
+            self.loop.schedule(delay, lambda: self._enqueue_round(client))
+        else:
+            self.loop.schedule(delay, lambda: self._client_round(client))
+
+    def _complete_round(self, client: int, model, acc: float, sig,
+                        epoch: int, parents) -> None:
+        """Publish at the round's simulated completion time (both paths)."""
+        self._publish(client, model, acc, sig, epoch, parents)
+        self._client_rounds[client] += 1
+        self._client_val[client] = acc
+        self._rounds_done += 1
+        # publisher monitors per GLOBAL round (n_clients publishes) by
+        # validating the AGGREGATED tip model on every client's val set
+        # — the same quantity the sync baselines track; per-client local
+        # models would ace their own non-IID shards and stop too early
+        if self._rounds_done % self.cfg.n_clients == 0:
+            gm = self.global_model()
+            accs = self._eval_global_on_vals(gm)
+            self.tracker.update(self.loop.now, float(np.mean(accs)))
+        if (not self.tracker.done
+                and self._client_rounds[client] < self.cfg.max_rounds):
+            self._start_round(0.0, client)
+
+    # -- round front half: tip selection + fetch + simulated costs ----------
+
+    def _select_and_cost(self, client: int):
+        """Tip selection, P2P fetch accounting and the path audit for one
+        round; returns (model refs to aggregate, parents, t_select+t_fetch).
+        Shared verbatim by the sequential and cohort paths."""
         cfgc, cost, prof = self.cfg, self.cost, self.profiles[client]
         epoch = self._client_rounds[client]
 
         n_evals_before = self._evals_total
+        batch_fn = None
+        if self.cohort is not None:
+            batch_fn = lambda ids: self._evaluate_tips_batch(client, ids)
         scores = select_tips(self.ledger, client, epoch, self.loop.now,
                              lambda t: self._evaluate_tip(client, t),
-                             self.contract, cfgc.tip, round_idx=epoch)
+                             self.contract, cfgc.tip, round_idx=epoch,
+                             evaluate_batch=batch_fn)
         n_evals = self._evals_total - n_evals_before
         t_select = cost.eval_time(prof, n_evals) + cost.chain_op * len(scores)
 
-        # P2P fetch of the selected models + optional path audit
-        models = [self.store.get(self.ledger.nodes[s.tx_id].model_ref)
-                  for s in scores]
+        refs = [self.ledger.nodes[s.tx_id].model_ref for s in scores]
         t_fetch = sum(cost.transfer_time(prof, cost.model_bytes)
-                      for _ in models)
+                      for _ in refs)
         if cfgc.verify_paths and scores:
             path = extract_path(self.ledger, scores[0].tx_id)
             ok, _ = verify_path(self.ledger, path)
@@ -116,43 +214,111 @@ class DagAflCoordinator:
                 self._verify_failures += 1
             t_fetch += cost.chain_op * len(path.records)
 
-        agg = tree_mean(models) if models else self.store.get(
-            self.ledger.nodes[self.ledger.genesis_id].model_ref)
-
-        new_model, _ = self.backend.train_local(
-            agg, self.client_data[client]["train"],
-            seed=int(self.rng.integers(2 ** 31)), epochs=cfgc.local_epochs)
-        t_train = cost.train_time(prof, cfgc.local_epochs, self.rng)
-
-        val_acc = self.backend.evaluate(new_model,
-                                        self.client_data[client]["val"])
-        sig = self.backend.signature(new_model, self.client_data[client]["train"])
-        t_post = (cost.eval_time(prof, 1) + cost.signature * prof.speed
-                  + cost.transfer_time(prof, cost.metadata_bytes))
-
+        if not refs:
+            refs = [self.ledger.nodes[self.ledger.genesis_id].model_ref]
         parents = tuple(s.tx_id for s in scores) or (self.ledger.genesis_id,)
-        total = t_select + t_fetch + t_train + t_post
+        return refs, parents, epoch, t_select + t_fetch
 
-        def finish(client=client, model=new_model, acc=val_acc, sig=sig,
-                   epoch=epoch, parents=parents):
-            self._publish(client, model, acc, sig, epoch + 1, parents)
-            self._client_rounds[client] += 1
-            self._client_val[client] = acc
-            self._rounds_done += 1
-            # publisher monitors per GLOBAL round (n_clients publishes) by
-            # validating the AGGREGATED tip model on every client's val set
-            # — the same quantity the sync baselines track; per-client local
-            # models would ace their own non-IID shards and stop too early
-            if self._rounds_done % self.cfg.n_clients == 0:
-                gm = self.global_model()
-                accs = [self.backend.evaluate(gm, self.client_data[c]["val"])
-                        for c in range(self.cfg.n_clients)]
-                self.tracker.update(self.loop.now, float(np.mean(accs)))
-            if (not self.tracker.done
-                    and self._client_rounds[client] < self.cfg.max_rounds):
-                self.loop.schedule(0.0, lambda: self._client_round(client))
+    def _t_post(self, prof: ClientProfile) -> float:
+        """Simulated cost of validate + signature + metadata publish."""
+        cost = self.cost
+        return (cost.eval_time(prof, 1) + cost.signature * prof.speed
+                + cost.transfer_time(prof, cost.metadata_bytes))
 
-        self.loop.schedule(total, finish)
+    def _front_half(self, client: int, t_start: float) -> Dict:
+        """Tip selection + the round's simulated-cost draws, as one record.
+        RNG order (seed, then train-time jitter) matches the seed repo's
+        sequential stream."""
+        refs, parents, epoch, t_front = self._select_and_cost(client)
+        seed = int(self.rng.integers(2 ** 31))
+        t_train = self.cost.train_time(self.profiles[client],
+                                       self.cfg.local_epochs, self.rng)
+        return {"client": client, "t_start": t_start, "refs": refs,
+                "parents": parents, "epoch": epoch, "t_front": t_front,
+                "t_train": t_train, "seed": seed}
+
+    def _dispatch_one(self, rd: Dict) -> None:
+        """Back half of ONE round on the backend's own jitted programs:
+        aggregate, train, validate, sign, and schedule the publish at the
+        round's own simulated completion time.  Used verbatim by the
+        sequential path and by cohort windows of one."""
+        client = rd["client"]
+        agg = tree_mean([self.store.get(r) for r in rd["refs"]])
+        model, _ = self.backend.train_local(
+            agg, self.client_data[client]["train"], seed=rd["seed"],
+            epochs=self.cfg.local_epochs)
+        acc = self.backend.evaluate(model, self.client_data[client]["val"])
+        sig = self.backend.signature(model, self.client_data[client]["train"])
+        total = rd["t_front"] + rd["t_train"] + self._t_post(
+            self.profiles[client])
+        self.loop.schedule(
+            rd["t_start"] + total - self.loop.now,
+            lambda: self._complete_round(client, model, acc, sig,
+                                         rd["epoch"] + 1, rd["parents"]))
+
+    # -- sequential client round ---------------------------------------------
+
+    def _client_round(self, client: int) -> None:
+        if self.tracker.done:
+            return
+        self._dispatch_one(self._front_half(client, self.loop.now))
+
+    # -- cohort-window client rounds ------------------------------------------
+
+    def _enqueue_round(self, client: int) -> None:
+        if not self.tracker.done:
+            self._window.add(client)
+
+    def _flush_cohort(self, batch) -> None:
+        """Dispatch one window: batch is [(client, start_time)] from
+        :class:`CohortWindow`.  Tip selection stays per-client (DAG-state
+        logic; its expensive part — candidate validation — is batched
+        underneath), then training/validation/signatures run as single
+        vmapped programs and every result publishes at its own simulated
+        completion time."""
+        cfgc = self.cfg
+        rounds = [self._front_half(client, t_start)
+                  for client, t_start in batch]
+
+        if len(rounds) == 1:
+            # a window of one: the backend's own jitted programs are already
+            # optimal — skip the stack/pad/unstack round trip entirely
+            self._dispatch_one(rounds[0])
+            return
+
+        # Eq. 6 for the whole cohort as ONE stacked reduction: stack the
+        # union of selected models once, then a (K, M) weight matrix row per
+        # client (uniform over its own selection, zero elsewhere)
+        uniq = list(dict.fromkeys(r for rd in rounds for r in rd["refs"]))
+        ref_pos = {r: i for i, r in enumerate(uniq)}
+        weights = np.zeros((len(rounds), len(uniq)), np.float32)
+        for k, rd in enumerate(rounds):
+            for r in rd["refs"]:
+                weights[k, ref_pos[r]] = 1.0
+        stacked_tips = tree_stack([self.store.get(r) for r in uniq])
+        agg_stacked = stacked_weighted(stacked_tips, weights)
+
+        # batched local training + validation + signature extraction
+        train_sets = [self.client_data[rd["client"]]["train"] for rd in rounds]
+        val_sets = [self.client_data[rd["client"]]["val"] for rd in rounds]
+        new_stacked, _ = self.cohort.train_cohort_stacked(
+            agg_stacked, train_sets, [rd["seed"] for rd in rounds],
+            epochs=cfgc.local_epochs)
+        val_accs = self.cohort.evaluate_cohort_stacked(new_stacked, val_sets)
+        sigs = self.cohort.signature_cohort_stacked(new_stacked, train_sets)
+        new_models = tree_unstack(new_stacked)
+        self._cohorts_dispatched += 1
+
+        # publish each round at ITS OWN simulated completion time
+        for rd, model, acc, sig in zip(rounds, new_models, val_accs, sigs):
+            total = (rd["t_front"] + rd["t_train"]
+                     + self._t_post(self.profiles[rd["client"]]))
+
+            def finish(rd=rd, model=model, acc=acc, sig=sig):
+                self._complete_round(rd["client"], model, acc, sig,
+                                     rd["epoch"] + 1, rd["parents"])
+
+            self.loop.schedule(rd["t_start"] + total - self.loop.now, finish)
 
     # -- run -------------------------------------------------------------------
 
@@ -174,19 +340,26 @@ class DagAflCoordinator:
         self.ledger.add_genesis(meta, 0.0, ref)
         for c in range(self.cfg.n_clients):
             # staggered joins: asynchrony from the first event on
-            self.loop.schedule(float(self.rng.uniform(0, 2.0)),
-                               lambda c=c: self._client_round(c))
+            self._start_round(float(self.rng.uniform(0, 2.0)), c)
         self.loop.run(stop=lambda: self.tracker.done)
+        if self._window is not None:
+            self._window.pending.clear()  # tracker stopped us mid-window
 
         # paper Table II reports AVERAGE accuracy across participants:
         # evaluate each client's latest model on the global test set
-        client_accs = []
+        latest_models = []
         for c in range(self.cfg.n_clients):
             tx = self.ledger.latest_of(c)
             if tx is None:
                 continue
-            model = self.store.get(self.ledger.nodes[tx].model_ref)
-            client_accs.append(self.backend.evaluate(model, self.global_test))
+            latest_models.append(
+                self.store.get(self.ledger.nodes[tx].model_ref))
+        if self.cohort is not None and latest_models:
+            client_accs = self.cohort.evaluate_many(latest_models,
+                                                    self.global_test)
+        else:
+            client_accs = [self.backend.evaluate(m, self.global_test)
+                           for m in latest_models]
         gm = self.global_model()
         tip_mean_acc = self.backend.evaluate(gm, self.global_test)
         client_mean = float(np.mean(client_accs)) if client_accs else 0.0
@@ -208,4 +381,5 @@ class DagAflCoordinator:
                 "chain_len": len(self.ledger),
                 "verify_failures": self._verify_failures,
                 "store_bytes_transferred": self.store.bytes_transferred,
+                "cohorts_dispatched": self._cohorts_dispatched,
             })

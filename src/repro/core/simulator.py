@@ -88,6 +88,49 @@ class EventLoop:
                 return
 
 
+class CohortWindow:
+    """Batches concurrent round-start requests for vectorized dispatch.
+
+    Requests ``add()``-ed within ``window`` simulated seconds of the first
+    one share a batch.  The batch flushes when it reaches ``capacity`` or,
+    via a close-timer armed when the window opens, at window-end — so a
+    request's dispatch (and therefore its tip staleness in DAG-AFL) is
+    never deferred past ``window`` seconds, regardless of what other
+    events pop in between.  ``flush_fn`` receives ``[(item, start_time)]``;
+    ``stop_fn`` suppresses the timer flush after the simulation has
+    converged (a mid-window stop leaves ``pending`` for the owner to
+    discard).
+    """
+
+    def __init__(self, loop: EventLoop, capacity: int, window: float,
+                 flush_fn: Callable, stop_fn: Callable[[], bool]):
+        self.loop = loop
+        self.capacity = capacity
+        self.window = window
+        self.flush_fn = flush_fn
+        self.stop_fn = stop_fn
+        self.pending: List = []
+        self._gen = 0
+
+    def add(self, item) -> None:
+        self.pending.append((item, self.loop.now))
+        if len(self.pending) == 1:           # window opener: arm the closer
+            gen = self._gen
+            self.loop.schedule(self.window, lambda: self._close(gen))
+        if len(self.pending) >= self.capacity:
+            self.flush()
+
+    def _close(self, gen: int) -> None:
+        if gen == self._gen and self.pending and not self.stop_fn():
+            self.flush()
+
+    def flush(self) -> None:
+        batch, self.pending = self.pending, []
+        self._gen += 1
+        if batch:
+            self.flush_fn(batch)
+
+
 @dataclass
 class ConvergenceTracker:
     """Validation-accuracy early stopping (paper: patience 5 on val avg)."""

@@ -70,12 +70,18 @@ def select_tips(ledger: DAGLedger,
                 evaluate_fn: Callable[[str], float],
                 contract: Optional[SimilarityContract],
                 cfg: TipSelectionConfig,
-                round_idx: int = 0) -> List[TipScore]:
+                round_idx: int = 0,
+                evaluate_batch: Optional[
+                    Callable[[Sequence[str]], None]] = None) -> List[TipScore]:
     """Returns the selected tips with their diagnostic scores.
 
     ``evaluate_fn(tx_id) -> accuracy`` validates a tip's model on the calling
     client's local validation data (the expensive step the similarity filter
-    minimises).
+    minimises).  ``evaluate_batch(tx_ids)``, when provided, is called with
+    each candidate set before the per-tip loop so a vectorized backend can
+    validate the whole set in one batched dispatch and serve ``evaluate_fn``
+    from its cache — the set of evaluated tips (and therefore the simulated
+    validation cost) is identical either way.
     """
     all_tips = ledger.tips()
     # a client never selects its OWN transactions: the paper's reachable set
@@ -110,6 +116,8 @@ def select_tips(ledger: DAGLedger,
     chosen: List[TipScore] = []
 
     # -- reachable side: direct validation, freshness-weighted rank --------
+    if evaluate_batch is not None and reachable:
+        evaluate_batch(reachable)
     scored_r = []
     for t in reachable:
         acc = evaluate_fn(t)
@@ -129,6 +137,8 @@ def select_tips(ledger: DAGLedger,
             rank_pos = {cid: i for i, cid in enumerate(owner_rank)}
             cands.sort(key=lambda t: rank_pos.get(owners[t], len(rank_pos)))
             cands = cands[:p]
+        if evaluate_batch is not None and cands:
+            evaluate_batch(cands)
         scored_u = []
         for t in cands:
             acc = evaluate_fn(t)

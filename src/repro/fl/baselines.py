@@ -28,8 +28,9 @@ import numpy as np
 
 from repro.core.aggregate import tree_interpolate, tree_mean, tree_weighted
 from repro.core.dag import DAGLedger, ModelStore, TxMetadata
-from repro.core.simulator import (ClientProfile, ConvergenceTracker, CostModel,
-                                  EventLoop, RunResult, make_profiles)
+from repro.core.simulator import (ClientProfile, CohortWindow,
+                                  ConvergenceTracker, CostModel, EventLoop,
+                                  RunResult, make_profiles)
 
 
 @dataclass
@@ -41,6 +42,10 @@ class FLConfig:
     patience: int = 5
     heterogeneity: float = 0.6
     seed: int = 0
+    # vectorized execution: batch up to this many concurrent client rounds
+    # into one vmapped program (1 = sequential reference path)
+    cohort_size: int = 1
+    cohort_window: float = 1.0
     # algorithm-specific knobs
     fedasync_alpha: float = 0.6
     fedasync_staleness: str = "poly"     # poly | constant
@@ -65,6 +70,17 @@ class _Harness:
         self.rng = np.random.default_rng(cfg.seed)
         self.tracker = ConvergenceTracker(cfg.target_accuracy, cfg.patience)
         self.key = jax.random.PRNGKey(cfg.seed)
+        self.cohort = None
+        if cfg.cohort_size > 1:
+            from repro.fl.cohort import CohortBackend
+            if CohortBackend.supports(backend):
+                self.cohort = CohortBackend(backend,
+                                            capacity=cfg.cohort_size)
+                self.cohort.register_shards(
+                    [client_data[c]["train"] for c in range(cfg.n_clients)],
+                    epochs=cfg.local_epochs)
+        self._val_sets = [client_data[c]["val"]
+                          for c in range(cfg.n_clients)]
 
     def init_model(self):
         from repro.core.aggregate import tree_size_bytes
@@ -78,11 +94,52 @@ class _Harness:
             seed=int(self.rng.integers(2 ** 31)),
             epochs=self.cfg.local_epochs)[0]
 
+    def round_duration(self, c: int) -> float:
+        """Simulated cost of one local round: train + up/down transfer."""
+        return (self.cost.train_time(self.profiles[c], self.cfg.local_epochs,
+                                     self.rng)
+                + 2 * self.cost.transfer_time(self.profiles[c],
+                                              self.cost.model_bytes))
+
+    def train_many(self, model, clients):
+        """Local rounds for several clients starting from one shared model;
+        returns (local models, simulated durations).  With a cohort engine,
+        capacity-sized groups run as single vmapped programs instead of
+        len(clients) serial ``train_local`` calls.  The sequential path
+        draws (seed, duration-jitter) interleaved per client — the seed
+        repo's RNG stream — so cohort_size=1 reproduces it exactly."""
+        clients = list(clients)
+        if self.cohort is None or len(clients) < 2:
+            out, durs = [], []
+            for c in clients:
+                out.append(self.train(model, c))
+                durs.append(self.round_duration(c))
+            return out, durs
+        out, durs = [], []
+        cap = self.cfg.cohort_size
+        for i in range(0, len(clients), cap):
+            group = clients[i:i + cap]
+            if len(group) == 1:
+                out.append(self.train(model, group[0]))
+                durs.append(self.round_duration(group[0]))
+                continue
+            seeds = [int(self.rng.integers(2 ** 31)) for _ in group]
+            models, _ = self.cohort.train_cohort(
+                [model] * len(group),
+                [self.client_data[c]["train"] for c in group],
+                seeds, epochs=self.cfg.local_epochs)
+            out.extend(models)
+            durs.extend(self.round_duration(c) for c in group)
+        return out, durs
+
     def val_acc(self, model, client: int) -> float:
         return self.backend.evaluate(model, self.client_data[client]["val"])
 
     def mean_val(self, model) -> float:
-        accs = [self.val_acc(model, c) for c in range(self.cfg.n_clients)]
+        if self.cohort is not None:
+            accs = self.cohort.evaluate_shared(model, self._val_sets)
+        else:
+            accs = [self.val_acc(model, c) for c in range(self.cfg.n_clients)]
         return float(np.mean(accs))
 
     def result(self, name, model, sim_time, rounds, extra=None) -> RunResult:
@@ -153,12 +210,7 @@ def run_fedavg(backend, client_data, global_test, cfg: FLConfig,
     t = 0.0
     sizes = [len(client_data[c]["train"]) for c in range(cfg.n_clients)]
     for r in range(cfg.max_rounds):
-        locals_, durations = [], []
-        for c in range(cfg.n_clients):
-            locals_.append(h.train(model, c))
-            durations.append(
-                h.cost.train_time(h.profiles[c], cfg.local_epochs, h.rng)
-                + 2 * h.cost.transfer_time(h.profiles[c], h.cost.model_bytes))
+        locals_, durations = h.train_many(model, range(cfg.n_clients))
         t += max(durations) + round_overhead      # synchronous barrier
         model = tree_weighted(locals_, sizes)
         if h.tracker.update(t, h.mean_val(model)):
@@ -172,32 +224,49 @@ def run_fedasync(backend, client_data, global_test, cfg: FLConfig,
     loop = EventLoop()
     state = {"model": h.init_model(), "version": 0, "rounds": 0}
 
-    def client_round(c: int, local_version: int):
+    def arrive(c: int, local, v: int):
+        staleness = state["version"] - v
+        alpha = cfg.fedasync_alpha
+        if cfg.fedasync_staleness == "poly":
+            alpha = alpha / (1.0 + staleness) ** 0.5
+        state["model"] = tree_interpolate(state["model"], local, alpha)
+        state["version"] += 1
+        state["rounds"] += 1
+        if state["rounds"] % cfg.n_clients == 0:
+            h.tracker.update(loop.now, h.mean_val(state["model"]))
+        if (not h.tracker.done
+                and state["rounds"] < cfg.max_rounds * cfg.n_clients):
+            loop.schedule(0.0, lambda: client_round(c))
+
+    def client_round(c: int):
+        """Sequential path: train at the round-start event from the model
+        (and version) current at that event."""
         if h.tracker.done:
             return
+        v = state["version"]
         local = h.train(state["model"], c)
-        dur = (h.cost.train_time(h.profiles[c], cfg.local_epochs, h.rng)
-               + 2 * h.cost.transfer_time(h.profiles[c], h.cost.model_bytes))
+        loop.schedule(h.round_duration(c), lambda: arrive(c, local, v))
 
-        def arrive(c=c, local=local, v=local_version):
-            staleness = state["version"] - v
-            alpha = cfg.fedasync_alpha
-            if cfg.fedasync_staleness == "poly":
-                alpha = alpha / (1.0 + staleness) ** 0.5
-            state["model"] = tree_interpolate(state["model"], local, alpha)
-            state["version"] += 1
-            state["rounds"] += 1
-            if state["rounds"] % cfg.n_clients == 0:
-                h.tracker.update(loop.now, h.mean_val(state["model"]))
-            if (not h.tracker.done
-                    and state["rounds"] < cfg.max_rounds * cfg.n_clients):
-                loop.schedule(0.0, lambda: client_round(c, state["version"]))
+    def flush(batch):
+        """Cohort path: one vmapped program for the window's rounds
+        (bounded staleness within cohort_window, as in the coordinator).
+        Version is captured HERE — the same moment state['model'] is read —
+        so staleness discounting matches what each round actually trained
+        from."""
+        v = state["version"]
+        locals_, durs = h.train_many(state["model"], [b[0] for b in batch])
+        for (c_, t0_), local, dur in zip(batch, locals_, durs):
+            loop.schedule(t0_ + dur - loop.now,
+                          lambda c_=c_, local=local: arrive(c_, local, v))
 
-        loop.schedule(dur, arrive)
+    if h.cohort is not None:
+        window = CohortWindow(loop, cfg.cohort_size, cfg.cohort_window,
+                              flush, lambda: h.tracker.done)
+        client_round = (lambda c: h.tracker.done or window.add(c))  # noqa: E731
 
     for c in range(cfg.n_clients):
         loop.schedule(float(h.rng.uniform(0, 1.0)),
-                      lambda c=c: client_round(c, 0))
+                      lambda c=c: client_round(c))
     loop.run(stop=lambda: h.tracker.done)
     return h.result("FedAsync", state["model"],
                     h.tracker.converged_at or loop.now, state["rounds"])
@@ -226,12 +295,7 @@ def run_fedat(backend, client_data, global_test, cfg: FLConfig,
         if h.tracker.done or rnd >= cfg.max_rounds:
             return
         members = tiers[ti]
-        locals_, durs = [], []
-        for c in members:
-            locals_.append(h.train(state["model"], c))
-            durs.append(h.cost.train_time(h.profiles[c], cfg.local_epochs, h.rng)
-                        + 2 * h.cost.transfer_time(h.profiles[c],
-                                                   h.cost.model_bytes))
+        locals_, durs = h.train_many(state["model"], members)
         dur = max(durs)
 
         def arrive(ti=ti, locals_=locals_, rnd=rnd):
@@ -279,12 +343,7 @@ def run_csafl(backend, client_data, global_test, cfg: FLConfig,
         if h.tracker.done or rnd >= cfg.max_rounds:
             return
         members = groups[gi]
-        locals_, durs = [], []
-        for c in members:
-            locals_.append(h.train(state["model"], c))
-            durs.append(h.cost.train_time(h.profiles[c], cfg.local_epochs, h.rng)
-                        + 2 * h.cost.transfer_time(h.profiles[c],
-                                                   h.cost.model_bytes))
+        locals_, durs = h.train_many(state["model"], members)
         dur = max(durs)
 
         def arrive(gi=gi, locals_=locals_, rnd=rnd, v=version):
@@ -365,7 +424,8 @@ def run_dagfl(backend, client_data, global_test, cfg: FLConfig,
         n_clients=cfg.n_clients, max_rounds=cfg.max_rounds,
         local_epochs=cfg.local_epochs, target_accuracy=cfg.target_accuracy,
         patience=cfg.patience, heterogeneity=cfg.heterogeneity, seed=cfg.seed,
-        verify_paths=False,
+        verify_paths=False, cohort_size=cfg.cohort_size,
+        cohort_window=cfg.cohort_window,
         tip=TipSelectionConfig(n_select=cfg.dagfl_n_select, lam=0.0,
                                use_freshness=False, use_similarity=False,
                                p_similar=max(cfg.n_clients, 8)))
@@ -385,6 +445,7 @@ def run_dagafl(backend, client_data, global_test, cfg: FLConfig,
         n_clients=cfg.n_clients, max_rounds=cfg.max_rounds,
         local_epochs=cfg.local_epochs, target_accuracy=cfg.target_accuracy,
         patience=cfg.patience, heterogeneity=cfg.heterogeneity, seed=cfg.seed,
+        cohort_size=cfg.cohort_size, cohort_window=cfg.cohort_window,
         tip=tip_cfg or TipSelectionConfig())
     coord = DagAflCoordinator(backend, client_data, global_test, dcfg,
                               cost, profiles)

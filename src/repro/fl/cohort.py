@@ -1,0 +1,443 @@
+"""Vectorized cohort execution engine: K clients as ONE batched XLA program.
+
+The simulator's event heap decides *when* each client's round runs in
+simulated time; this module decides *how* the container executes the work.
+Instead of K serial ``train_local`` / ``evaluate`` / ``signature`` calls, a
+:class:`CohortBackend` stacks the K clients' parameter pytrees along a
+leading client axis (``tree_stack``) and runs local training, evaluation and
+signature extraction as single batched jitted programs.  Training — the
+FLOP-heavy path — is ``jax.vmap``-batched with the convolutions rewritten
+as im2col GEMMs (see ``_conv_as_matmul``); evaluation and signatures are
+FLOP-light, so they are ``lax.map``-fused into one dispatch while keeping
+the dense-conv lowering per client.
+
+Ragged shards are handled by padding + masking:
+
+  * training: every client's (epochs x n_batches) step sequence is padded to
+    a common length ``T``; masked steps compute a gradient on zero-padding
+    but the pytree select keeps the pre-step params/optimizer state, so
+    padding NEVER leaks into the trained weights.
+  * evaluation/signature: sample axes are padded to a common length and the
+    accuracy / Eq. 3 zero-fraction means are masked, so padded samples carry
+    zero weight.
+
+Shape discipline (CPU/TPU friendly): the cohort axis is padded to powers of
+two capped at ``capacity``, the training step axis to a monotone registered
+maximum, and eval/signature sample axes to per-call targets quantized by
+``eval_pad_quantum`` — so steady-state dispatches hit a bounded set of
+compiled programs instead of retracing.
+
+Currently implemented for :class:`repro.fl.backend.CNNBackend` (the
+paper-faithful VGG path used by the coordinator, baselines and benchmarks);
+``CohortBackend.supports`` lets callers fall back to the sequential path for
+other backends.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import tree_stack, tree_unstack
+from repro.data.synthetic import Dataset
+from repro.fl.backend import CNNBackend
+from repro.optim.optimizers import apply_updates
+
+
+def _tree_select(keep, new, old):
+    """Per-leaf ``where(keep, new, old)`` — identity step when masked out."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(keep, a, b), new, old)
+
+
+def _conv_as_matmul(x, w):
+    """SAME-padding stride-1 convolution as im2col + one GEMM.
+
+    ``jax.vmap`` over per-client kernels turns ``lax.conv`` into a
+    batch-grouped convolution that XLA:CPU executes on a slow generic path
+    (measured ~2x slower than K serial convs).  The same contraction phrased
+    as a matmul vmaps into a single batched GEMM — the fast path on CPU
+    (Eigen) and the MXU-native form on TPU.  Math is identical to
+    ``lax.conv_general_dilated`` up to float summation order.
+    """
+    kh, kw, cin, cout = w.shape
+    ph, pw = kh // 2, kw // 2
+    b, h, ww, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    # (B, H, W, kh*kw, C): taps ordered (kh, kw) row-major to match the
+    # HWIO kernel layout flattened as (kh*kw*cin, cout)
+    patches = jnp.stack([xp[:, i:i + h, j:j + ww, :]
+                         for i in range(kh) for j in range(kw)], axis=3)
+    patches = patches.reshape(b * h * ww, kh * kw * c)
+    y = patches @ w.reshape(kh * kw * cin, cout)
+    return y.reshape(b, h, ww, cout)
+
+
+def _max_pool_2x2(x):
+    b, h, w, c = x.shape
+    x = x[:, :h // 2 * 2, :w // 2 * 2]        # VALID-window truncation
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return jnp.max(x, axis=(2, 4))
+
+
+def _pad_axis0(arr: jnp.ndarray, target: int) -> jnp.ndarray:
+    if arr.shape[0] == target:
+        return arr
+    pad = [(0, target - arr.shape[0])] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, pad)
+
+
+class CohortBackend:
+    """Batched train/eval/signature over a stacked K-client pytree.
+
+    Wraps a per-client backend; ``capacity`` fixes the cohort axis so every
+    flush compiles to the same program (short cohorts are padded with a
+    repeat of the last client and fully masked out).
+    """
+
+    def __init__(self, backend: CNNBackend, capacity: Optional[int] = None,
+                 eval_pad_quantum: int = 64):
+        if not self.supports(backend):
+            raise TypeError(
+                f"CohortBackend supports CNNBackend, got {type(backend)}")
+        self.backend = backend
+        self.capacity = capacity
+        # padding quantum for eval/signature sample axes: shards pad to the
+        # next power of two below it and to multiples of it above, keeping
+        # the compiled-program count bounded with ragged validation shards
+        self.eval_pad_quantum = eval_pad_quantum
+        self.cfg = backend.cfg
+        self.opt = backend.opt
+        self._pad_T = 0            # monotone step-axis pad target
+        self._eval_data_cache: Dict = {}
+        self._train_jit = jax.jit(self._train_impl)
+        self._eval_jit = jax.jit(self._eval_impl)
+        self._eval_shared_jit = jax.jit(self._eval_shared_impl)
+        self._eval_many_jit = jax.jit(self._eval_many_impl)
+        self._sig_jit = jax.jit(self._sig_impl)
+
+    @staticmethod
+    def supports(backend) -> bool:
+        return isinstance(backend, CNNBackend)
+
+    def register_shards(self, train_shards: Sequence[Dataset],
+                        epochs: Optional[int] = None) -> None:
+        """Pre-size the training step-axis pad target from the client
+        shards and the epochs the caller will actually train with, so the
+        very first flush already compiles the steady-state program.  The
+        target must match the real step count: it is monotone, so an
+        over-estimate (e.g. the backend's default epochs when the
+        coordinator trains fewer) would permanently pad — and compute —
+        every cohort scan to the inflated length.  (Eval pad targets are
+        per-call: a global target would let one large shard — e.g. the
+        final global-test sweep — permanently inflate every small-val-set
+        dispatch.)"""
+        b = self.backend
+        epochs = epochs or b.local_epochs
+        for ds in train_shards:
+            n_batches = max(len(ds) // b.batch_size, 1)
+            self._pad_T = max(self._pad_T, epochs * n_batches)
+
+    def _round_chunk(self, n: int) -> int:
+        """Pad target for a sample axis: next power of two below the
+        quantum (tiny val shards don't pay quantum-multiple waste), quantum
+        multiples above it (bounded compile count either way)."""
+        c = self.eval_pad_quantum
+        if n >= c:
+            return -(-n // c) * c
+        p = 1
+        while p < n:
+            p *= 2
+        return p
+
+    # -- jitted programs ----------------------------------------------------
+
+    def _forward(self, params, x, want_signature: bool = False):
+        """``cnn_forward`` in matmul form (see :func:`_conv_as_matmul`);
+        the signature, when requested, is per-sample (B, channels) so the
+        caller can take a padding-masked mean."""
+        cfg = self.cfg
+        sig = None
+        conv_idx = 0
+        for stack_params in params["convs"]:
+            for p in stack_params:
+                x = jax.nn.relu(_conv_as_matmul(x, p["w"]) + p["b"])
+                if want_signature and conv_idx == cfg.signature_layer:
+                    sig = jnp.mean((x == 0.0).astype(jnp.float32),
+                                   axis=(1, 2))                  # (B, ch)
+                conv_idx += 1
+            x = _max_pool_2x2(x)
+        x = x.reshape(x.shape[0], -1)
+        for p in params["fcs"][:-1]:
+            x = jax.nn.relu(x @ p["w"] + p["b"])
+        p = params["fcs"][-1]
+        return x @ p["w"] + p["b"], sig
+
+    def _loss(self, params, x, y):
+        logits, _ = self._forward(params, x)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - ll)
+
+    def _train_impl(self, stacked_params, xb, yb, mask):
+        """xb (K, T, B, H, W, C); yb (K, T, B); mask (K, T) — one vmapped
+        scan: the whole cohort advances one SGD step per scan tick."""
+
+        def one_client(params, xs, ys, ms):
+            opt_state = self.opt.init(params)
+
+            def step(carry, batch):
+                params, opt_state = carry
+                x, y, m = batch
+                loss, grads = jax.value_and_grad(self._loss)(params, x, y)
+                updates, new_opt = self.opt.update(grads, opt_state, params)
+                new_params = apply_updates(params, updates)
+                params = _tree_select(m, new_params, params)
+                opt_state = _tree_select(m, new_opt, opt_state)
+                return (params, opt_state), jnp.where(m, loss, 0.0)
+
+            (params, _), losses = jax.lax.scan(
+                step, (params, opt_state), (xs, ys, ms))
+            return params, losses
+
+        return jax.vmap(one_client)(stacked_params, xb, yb, mask)
+
+    def _masked_correct(self, params, xs, ys, ms):
+        """Masked #correct on one shard, conv-form forward (see note in
+        ``_eval_impl`` on why eval does NOT use the matmul form)."""
+        from repro.models import cnn as cnn_mod
+        logits, _ = cnn_mod.cnn_forward(params, xs, self.cfg)
+        correct = (jnp.argmax(logits, -1) == ys).astype(jnp.float32)
+        return jnp.sum(correct * ms) / jnp.maximum(jnp.sum(ms), 1.0)
+
+    def _eval_impl(self, stacked_params, x, y, mask):
+        """K models on K padded shards: x (K, N, ...), mask (K, N).
+
+        Evaluation is FLOP-light and per-client weights make a vmapped conv
+        lower to XLA:CPU's slow grouped path, so the win here is dispatch
+        fusion, not arithmetic batching: ``lax.map`` runs the K conv-form
+        forwards inside ONE compiled program (one dispatch, one sync) while
+        each iteration keeps the fast dense-conv lowering."""
+        return jax.lax.map(
+            lambda args: self._masked_correct(*args),
+            (stacked_params, x, y, mask))
+
+    def _eval_shared_impl(self, params, x, y, mask):
+        """ONE model on K padded shards (publisher's convergence monitor).
+        The params carry no cohort axis, so the K shards simply fold into
+        the batch dimension of the conv-form forward — true batching."""
+        from repro.models import cnn as cnn_mod
+        k, n = y.shape
+        flat = x.reshape((k * n,) + x.shape[2:])
+        logits, _ = cnn_mod.cnn_forward(params, flat, self.cfg)
+        correct = (jnp.argmax(logits.reshape(k, n, -1), -1) == y)
+        correct = correct.astype(jnp.float32) * mask
+        return jnp.sum(correct, axis=1) / jnp.maximum(jnp.sum(mask, axis=1),
+                                                      1.0)
+
+    def _eval_many_impl(self, stacked_params, x, y, mask):
+        """M models on ONE padded shard (batched tip validation): fused
+        into one program via ``lax.map`` for the same reason as
+        ``_eval_impl``."""
+        return jax.lax.map(
+            lambda p: self._masked_correct(p, x, y, mask), stacked_params)
+
+    def _sig_forward(self, params, x):
+        """Per-sample Eq. 3 zero fractions, conv-form, EARLY EXIT: only the
+        convs up to ``signature_layer`` run — the classifier head and later
+        stacks contribute nothing to the signature."""
+        cfg = self.cfg
+        conv_idx = 0
+        for stack_params in params["convs"]:
+            for p in stack_params:
+                x = jax.lax.conv_general_dilated(
+                    x, p["w"], window_strides=(1, 1), padding="SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+                x = jax.nn.relu(x + p["b"])
+                if conv_idx == cfg.signature_layer:
+                    return jnp.mean((x == 0.0).astype(jnp.float32),
+                                    axis=(1, 2))                  # (N, ch)
+                conv_idx += 1
+            x = _max_pool_2x2(x)
+        raise ValueError(f"signature_layer {cfg.signature_layer} out of "
+                         f"range for {cfg.name}")
+
+    def _sig_impl(self, stacked_params, x, mask):
+        """Masked Eq. 3-4 signatures: per-sample zero fractions, then a
+        masked mean so padding samples never enter the signature."""
+
+        def one(args):
+            params, xs, ms = args
+            zf = self._sig_forward(params, xs)
+            w = ms[:, None]
+            return jnp.sum(zf * w, axis=0) / jnp.maximum(jnp.sum(w), 1.0)
+
+        return jax.lax.map(one, (stacked_params, x, mask))
+
+    # -- host-side batch assembly -------------------------------------------
+
+    def _prepare_train(self, datasets: Sequence[Dataset], seeds: Sequence[int],
+                       epochs: int):
+        """Replicates ``CNNBackend.train_local``'s exact per-client batch
+        sampling (same np RNG stream per seed), then pads the step axis."""
+        b = self.backend
+        xs_all, ys_all, steps = [], [], []
+        for ds, seed in zip(datasets, seeds):
+            rng = np.random.default_rng(seed)
+            xs, ys = [], []
+            for _ in range(epochs):
+                xb, yb = b._batches(ds, rng)
+                xs.append(xb)
+                ys.append(yb)
+            xs_all.append(jnp.concatenate(xs))
+            ys_all.append(jnp.concatenate(ys))
+            steps.append(int(xs_all[-1].shape[0]))
+
+        self._pad_T = max(self._pad_T, *steps)
+        T = self._pad_T
+        xb = jnp.stack([_pad_axis0(x, T) for x in xs_all])
+        yb = jnp.stack([_pad_axis0(y, T) for y in ys_all])
+        mask = jnp.stack([
+            jnp.arange(T) < s for s in jnp.asarray(steps)]).astype(jnp.float32)
+        return xb, yb, mask, steps
+
+    def _pad_cohort(self, stacked, xb, yb, mask):
+        """Pad the cohort axis to the next power of two (capped at
+        ``capacity``) with fully-masked repeats: short cohorts waste at most
+        2x compute while the jit cache stays bounded at log2(capacity)
+        programs per shape family."""
+        k = int(mask.shape[0])
+        target = 1
+        while target < k:
+            target *= 2
+        if self.capacity is not None:
+            target = min(max(target, 1), max(self.capacity, k))
+        if k >= target:
+            return stacked, xb, yb, mask, k
+        reps = target - k
+        stacked = jax.tree_util.tree_map(
+            lambda leaf: jnp.concatenate(
+                [leaf, jnp.repeat(leaf[-1:], reps, axis=0)]), stacked)
+        xb = jnp.concatenate([xb, jnp.repeat(xb[-1:], reps, axis=0)])
+        yb = jnp.concatenate([yb, jnp.repeat(yb[-1:], reps, axis=0)])
+        mask = jnp.concatenate(
+            [mask, jnp.zeros((reps,) + mask.shape[1:], mask.dtype)])
+        return stacked, xb, yb, mask, k
+
+    def _eval_arrays(self, datasets: Sequence[Dataset], limit: int):
+        """Padded (x, y, mask) for a tuple of shards.  Per-DATASET caching:
+        each shard is padded to its own rounded size once; per call we stack
+        the cached singles (topping up to the call-wide max if the batch
+        mixes sizes), so arbitrary cohort compositions — the monitor's full
+        val-set sweep, a window's subset — reuse the same buffers."""
+        ns = [min(len(ds), limit) for ds in datasets]
+        target = max(self._round_chunk(n) for n in ns)
+        singles = []
+        for ds, n in zip(datasets, ns):
+            key = (id(ds), limit)
+            hit = self._eval_data_cache.get(key)
+            if hit is None:
+                own = self._round_chunk(n)
+                x1 = _pad_axis0(jnp.asarray(ds.x[:n]), own)
+                y1 = _pad_axis0(jnp.asarray(ds.y[:n]), own)
+                m1 = (jnp.arange(own) < n).astype(jnp.float32)
+                # hold ds so the id() key stays unique for our lifetime
+                hit = (ds, x1, y1, m1)
+                self._eval_data_cache[key] = hit
+            singles.append(hit)
+        x = jnp.stack([_pad_axis0(s[1], target) for s in singles])
+        y = jnp.stack([_pad_axis0(s[2], target) for s in singles])
+        mask = jnp.stack([_pad_axis0(s[3], target) for s in singles])
+        return x, y, mask
+
+    # -- public API ----------------------------------------------------------
+
+    def train_cohort_stacked(self, stacked_params, datasets, seeds,
+                             epochs: Optional[int] = None):
+        """Train K clients as one program; returns (stacked params, losses).
+
+        ``losses[k]`` matches the sequential path's contract: the mean loss
+        over client k's LAST local epoch.
+        """
+        epochs = epochs or self.backend.local_epochs
+        xb, yb, mask, steps = self._prepare_train(datasets, seeds, epochs)
+        stacked_params, xb, yb, mask, k = self._pad_cohort(
+            stacked_params, xb, yb, mask)
+        new_params, losses = self._train_jit(stacked_params, xb, yb, mask)
+        losses = np.asarray(losses)
+        per_epoch = [s // epochs for s in steps]
+        final = [float(np.mean(losses[i, s - per_epoch[i]:s]))
+                 for i, s in enumerate(steps)]
+        if k < losses.shape[0]:
+            new_params = jax.tree_util.tree_map(lambda l: l[:k], new_params)
+        return new_params, final
+
+    def train_cohort(self, params_list, datasets, seeds,
+                     epochs: Optional[int] = None):
+        stacked, losses = self.train_cohort_stacked(
+            tree_stack(params_list), datasets, seeds, epochs)
+        return tree_unstack(stacked), losses
+
+    def evaluate_cohort_stacked(self, stacked_params, datasets,
+                                limit: int = 512) -> List[float]:
+        """K models, each on its own (ragged) shard."""
+        x, y, mask = self._eval_arrays(datasets, limit)
+        k = x.shape[0]
+        stacked_params, x, y, mask, k = self._pad_cohort(
+            stacked_params, x, y, mask)
+        accs = self._eval_jit(stacked_params, x, y, mask)
+        return [float(a) for a in np.asarray(accs)[:k]]
+
+    def evaluate_cohort(self, params_list, datasets,
+                        limit: int = 512) -> List[float]:
+        return self.evaluate_cohort_stacked(tree_stack(params_list), datasets,
+                                            limit)
+
+    def evaluate_shared(self, params, datasets, limit: int = 512
+                        ) -> List[float]:
+        """One model on K shards in one dispatch (publisher's monitor)."""
+        x, y, mask = self._eval_arrays(datasets, limit)
+        accs = self._eval_shared_jit(params, x, y, mask)
+        return [float(a) for a in np.asarray(accs)]
+
+    def evaluate_many(self, params_list, ds: Dataset,
+                      limit: int = 512) -> List[float]:
+        """M candidate models on one validation shard (tip selection).
+
+        The model axis is padded to the next power of two (with repeats) so
+        repeated tip sweeps reuse a handful of compiled programs.
+        """
+        m = len(params_list)
+        if m == 0:
+            return []
+        if m == 1:
+            # one candidate: the backend's conv-form program wins — no
+            # stacking, no padding, and it shares the sequential jit cache
+            return [self.backend.evaluate(params_list[0], ds, limit)]
+        m_pad = 1
+        while m_pad < m:
+            m_pad *= 2
+        padded = list(params_list) + [params_list[-1]] * (m_pad - m)
+        # sample axis padded to the shared eval target: compilations stay
+        # bounded at log2(M) programs even with ragged validation shards
+        x, y, mask = self._eval_arrays([ds], limit)
+        accs = self._eval_many_jit(tree_stack(padded), x[0], y[0], mask[0])
+        return [float(a) for a in np.asarray(accs)[:m]]
+
+    def signature_cohort_stacked(self, stacked_params, datasets,
+                                 limit: int = 128) -> np.ndarray:
+        """(K, channels) Eq. 3 signatures, one masked batched dispatch."""
+        x, _, mask = self._eval_arrays(datasets, limit)
+        # pass mask in the label slot: _pad_cohort pads a (K, N) array there,
+        # not a second full copy of the (K, N, H, W, C) images
+        stacked_params, x, _, mask, k = self._pad_cohort(
+            stacked_params, x, mask, mask)
+        sigs = self._sig_jit(stacked_params, x, mask)
+        return np.asarray(sigs)[:k]
+
+    def signature_cohort(self, params_list, datasets,
+                         limit: int = 128) -> np.ndarray:
+        return self.signature_cohort_stacked(tree_stack(params_list),
+                                             datasets, limit)

@@ -100,6 +100,15 @@ class _Instr:
     rest: str
 
 
+def _call_body(instr: _Instr) -> str:
+    """Text after the op's call paren.  Splitting on ``op + "("`` (not the
+    first "(") keeps tiled-layout annotations in the result-type prefix —
+    e.g. ``f32[64,32]{1,0:T(8,128)}`` in post-optimization TPU HLO — from
+    being mistaken for the operand list."""
+    parts = instr.rest.split(instr.op + "(", 1)
+    return parts[1] if len(parts) > 1 else ""
+
+
 def _parse_computations(text: str) -> Dict[str, List[_Instr]]:
     comps: Dict[str, List[_Instr]] = {}
     cur: Optional[str] = None
@@ -143,10 +152,11 @@ def _dot_flops(instr: _Instr, symbols: Dict[str, str]) -> float:
     result = 1.0
     for d in out_dims:
         result *= d
-    # contraction size from lhs operand shape + lhs_contracting_dims
-    ops = re.findall(r"\((%[\w.\-]+)[,)]|,\s*(%[\w.\-]+)[,)]",
-                     instr.rest)
-    names = [a or b for a, b in ops]
+    # contraction size from lhs operand shape + lhs_contracting_dims;
+    # operands appear as "dot(<type> %lhs, <type> %rhs)" in compiled HLO,
+    # so take the %-names inside the call parens ("),": operand types may
+    # carry parens in TPU tile annotations, a bare ")" cuts too early)
+    names = re.findall(r"(%[\w.\-]+)", _call_body(instr).split("),", 1)[0])
     lhs_type = symbols.get(names[0], "") if names else ""
     lhs = _shape_dims(lhs_type)
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
@@ -167,7 +177,7 @@ def _conv_flops(instr: _Instr, symbols: Dict[str, str]) -> float:
     result = 1.0
     for d in out[1]:
         result *= d
-    ops = re.findall(r"(%[\w.\-]+)", instr.rest.split("(", 1)[1])
+    ops = re.findall(r"(%[\w.\-]+)", _call_body(instr))
     kernel = _shape_dims(symbols.get(ops[1], "")) if len(ops) > 1 else None
     k = 1.0
     if kernel:
@@ -203,8 +213,8 @@ def analyze_hlo(text: str) -> Cost:
                 continue
 
             def operand_names():
-                body = ins.rest.split("(", 1)[1] if "(" in ins.rest else ""
-                return re.findall(r"(%[\w.\-]+)", body.split("),", 1)[0])
+                return re.findall(r"(%[\w.\-]+)",
+                                  _call_body(ins).split("),", 1)[0])
 
             own = Cost()
             if op == "dynamic-update-slice":

@@ -1,0 +1,199 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this test suite.
+
+The CI image installs the real ``hypothesis`` (see requirements.txt); this
+fallback keeps the property-test modules collectable and meaningfully
+runnable in hermetic containers where it is absent.  It implements the
+subset the suite uses — ``given``, ``settings``, and the ``integers`` /
+``floats`` / ``lists`` / ``tuples`` / ``sampled_from`` strategies — as a
+deterministic random sampler (fixed seed, so failures reproduce).  No
+shrinking, no database, no health checks.
+
+``tests/conftest.py`` installs this module into ``sys.modules`` as
+``hypothesis`` only when the real package cannot be imported.
+"""
+from __future__ import annotations
+
+
+import random
+from types import ModuleType
+from typing import Any, Callable, List, Sequence
+
+DEFAULT_MAX_EXAMPLES = 25
+_SEED = 0xDA6AF1
+
+
+class Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "Strategy":
+        def draw(rng: random.Random):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate never satisfied")
+        return Strategy(draw)
+
+
+def integers(min_value: int = -(2 ** 31), max_value: int = 2 ** 31 - 1
+             ) -> Strategy:
+    def draw(rng: random.Random) -> int:
+        # bias toward the boundaries, where off-by-ones live
+        r = rng.random()
+        if r < 0.15:
+            return min_value
+        if r < 0.3:
+            return max_value
+        return rng.randint(min_value, max_value)
+    return Strategy(draw)
+
+
+def floats(min_value: float = -1e9, max_value: float = 1e9,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           width: int = 64) -> Strategy:
+    def draw(rng: random.Random) -> float:
+        r = rng.random()
+        if r < 0.1:
+            return float(min_value)
+        if r < 0.2:
+            return float(max_value)
+        if r < 0.3 and min_value <= 0.0 <= max_value:
+            return 0.0
+        return rng.uniform(min_value, max_value)
+    return Strategy(draw)
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10,
+          unique: bool = False) -> Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        out: List[Any] = []
+        attempts = 0
+        while len(out) < n and attempts < 1000:
+            v = elements.example_from(rng)
+            attempts += 1
+            if unique and v in out:
+                continue
+            out.append(v)
+        return out
+    return Strategy(draw)
+
+
+def tuples(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(s.example_from(rng) for s in strategies))
+
+
+def sampled_from(choices: Sequence[Any]) -> Strategy:
+    seq = list(choices)
+    return Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def just(value: Any) -> Strategy:
+    return Strategy(lambda rng: value)
+
+
+def one_of(*strategies: Strategy) -> Strategy:
+    return Strategy(
+        lambda rng: strategies[rng.randrange(len(strategies))].example_from(rng))
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored) -> Callable:
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return decorate
+
+
+class HealthCheck:
+    """Accepted and ignored (API compatibility)."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return []
+
+
+def given(*strategies: Strategy, **kw_strategies: Strategy) -> Callable:
+    def decorate(fn):
+        # NOTE: no functools.wraps — pytest must see a parameterless
+        # signature, or it would treat the strategy params as fixtures.
+        def wrapper():
+            n = getattr(fn, "_fallback_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            ran = 0
+            for i in range(n * 4):            # head-room for assume() rejects
+                if ran >= n:
+                    break
+                pos = tuple(s.example_from(rng) for s in strategies)
+                kws = {k: s.example_from(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*pos, **kws)
+                except _Unsatisfied:
+                    continue
+                except Exception:
+                    print(f"Falsifying example (fallback hypothesis): "
+                          f"args={pos} kwargs={kws}")
+                    raise
+                ran += 1
+            return None
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = fn.__qualname__
+        return wrapper
+    return decorate
+
+
+def _build_module() -> ModuleType:
+    mod = ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = HealthCheck
+    mod.__version__ = "0.0.0-fallback"
+    st = ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "lists", "tuples",
+                 "sampled_from", "just", "one_of"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    return mod
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` if the real one is missing."""
+    import sys
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401  (real package present)
+        return
+    except ImportError:
+        pass
+    mod = _build_module()
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies

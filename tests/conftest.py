@@ -2,3 +2,10 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# Hermetic containers may lack `hypothesis`; fall back to the bundled
+# deterministic shim so property-test modules still collect and run.
+import _hypothesis_fallback  # noqa: E402
+
+_hypothesis_fallback.install()

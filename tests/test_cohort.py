@@ -1,0 +1,177 @@
+"""Vectorized cohort engine: equivalence with the sequential path.
+
+The contract under test (ISSUE 1): a vmapped cohort round is numerically
+equivalent — per client, within float tolerance — to K sequential
+``train_local`` calls with the same seeds, and ragged-shard padding/masking
+never leaks into gradients, evaluation or signatures.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.cnn import vgg_for
+from repro.core.aggregate import (stacked_mean, stacked_weighted, tree_mean,
+                                  tree_stack, tree_unstack, tree_weighted)
+from repro.data import make_benchmark_dataset, partition_dirichlet, split_811
+from repro.data.synthetic import Dataset
+from repro.fl.backend import CNNBackend
+from repro.fl.cohort import CohortBackend
+
+# float tolerance between the engine's matmul-form conv and lax.conv:
+# identical math, different summation order
+ATOL = 5e-3
+
+
+def _leaves_close(a, b, atol=ATOL):
+    return all(np.allclose(x, y, atol=atol) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_benchmark_dataset("mnist", n_samples=900, seed=0)
+    splits = split_811(ds)
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=2, batch_size=32)
+    return backend, splits
+
+
+def _shards(splits, sizes, seed=0):
+    """Deliberately ragged shards (different batch counts per client)."""
+    rng = np.random.default_rng(seed)
+    train = splits["train"]
+    out = []
+    for s in sizes:
+        idx = rng.choice(len(train), size=s, replace=False)
+        out.append(Dataset(train.x[idx], train.y[idx]))
+    return out
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(2, 4), st.integers(0, 2 ** 31 - 1))
+def test_cohort_train_matches_sequential(n_clients, seed):
+    """Same seeds => same per-client weights, sequential vs vmapped."""
+    ds = make_benchmark_dataset("mnist", n_samples=600, seed=1)
+    splits = split_811(ds)
+    rng = np.random.default_rng(seed)
+    sizes = [int(rng.integers(40, 200)) for _ in range(n_clients)]
+    shards = _shards(splits, sizes, seed % 1000)
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=2, batch_size=32)
+    cohort = CohortBackend(backend, capacity=n_clients)
+    params = [backend.init(jax.random.PRNGKey(seed % 7 + i))
+              for i in range(n_clients)]
+    seeds = [int(rng.integers(2 ** 31)) for _ in range(n_clients)]
+
+    seq = [backend.train_local(p, d, seed=s)
+           for p, d, s in zip(params, shards, seeds)]
+    coh_params, coh_losses = cohort.train_cohort(params, shards, seeds)
+
+    for i in range(n_clients):
+        assert _leaves_close(seq[i][0], coh_params[i]), f"client {i} diverged"
+        assert seq[i][1] == pytest.approx(coh_losses[i], abs=5e-2)
+
+
+def test_padding_never_leaks_into_gradients(world):
+    """A client trained inside a ragged cohort (so its step axis is padded
+    against a much larger peer, and the cohort axis itself is padded to
+    capacity) must get EXACTLY the weights it gets when trained alone."""
+    backend, splits = world
+    small, large = _shards(splits, [40, 420], seed=3)
+    # capacity 4 with 2 clients: the cohort axis itself gets masked repeats,
+    # on top of small's step axis being padded against large's
+    cohort = CohortBackend(backend, capacity=4)
+    p0 = backend.init(jax.random.PRNGKey(0))
+    p1 = backend.init(jax.random.PRNGKey(1))
+
+    solo_small, _ = backend.train_local(p0, small, seed=7)
+    solo_large, _ = backend.train_local(p1, large, seed=8)
+    coh, _ = cohort.train_cohort([p0, p1], [small, large], [7, 8])
+
+    assert _leaves_close(solo_small, coh[0])
+    assert _leaves_close(solo_large, coh[1])
+    # and evaluation / signatures ignore padded samples
+    accs = cohort.evaluate_cohort(coh, [small, large])
+    sigs = cohort.signature_cohort(coh, [small, large])
+    assert accs[0] == pytest.approx(backend.evaluate(coh[0], small), abs=1e-5)
+    assert accs[1] == pytest.approx(backend.evaluate(coh[1], large), abs=1e-5)
+    assert np.allclose(sigs[0], backend.signature(coh[0], small), atol=1e-2)
+    assert np.allclose(sigs[1], backend.signature(coh[1], large), atol=1e-2)
+
+
+def test_evaluate_many_and_shared_match_sequential(world):
+    backend, splits = world
+    shards = _shards(splits, [60, 90, 120], seed=5)
+    cohort = CohortBackend(backend, capacity=4)
+    models = [backend.train_local(backend.init(jax.random.PRNGKey(i)),
+                                  shards[i % 3], seed=i)[0] for i in range(3)]
+    many = cohort.evaluate_many(models, splits["val"])
+    for m, model in zip(many, models):
+        assert m == pytest.approx(backend.evaluate(model, splits["val"]),
+                                  abs=1e-5)
+    shared = cohort.evaluate_shared(models[0], shards)
+    for a, d in zip(shared, shards):
+        assert a == pytest.approx(backend.evaluate(models[0], d), abs=1e-5)
+
+
+def test_stacked_aggregate_matches_listwise(world):
+    backend, _ = world
+    models = [backend.init(jax.random.PRNGKey(i)) for i in range(3)]
+    stacked = tree_stack(models)
+
+    assert _leaves_close(stacked_mean(stacked), tree_mean(models), atol=1e-6)
+
+    w = np.array([[1.0, 1.0, 0.0], [0.2, 0.3, 0.5]], np.float32)
+    per_client = tree_unstack(stacked_weighted(stacked, w))
+    assert _leaves_close(per_client[0], tree_mean(models[:2]), atol=1e-6)
+    assert _leaves_close(per_client[1],
+                         tree_weighted(models, [0.2, 0.3, 0.5]), atol=1e-6)
+
+    # round trip
+    for a, b in zip(tree_unstack(stacked), models):
+        assert _leaves_close(a, b, atol=0.0)
+
+
+def test_coordinator_cohort_run_is_consistent(world):
+    """End-to-end: the cohort coordinator completes every scheduled round
+    (no window may strand a request), keeps publishes on the simulated
+    clock, produces a verifiable DAG, and learns.
+
+    Tight sequential-vs-cohort parity (wall-clock AND accuracy) is asserted
+    at benchmark geometry by ``benchmarks/chain_perf.py --cohort-size``; at
+    this 2-round scale trajectory noise from ~10-sample val shards makes a
+    cross-engine accuracy comparison flaky, so the invariants here are
+    structural."""
+    from repro.core import (DagAflConfig, DagAflCoordinator,
+                            TipSelectionConfig, verify_full_dag)
+    from repro.core.simulator import CostModel, make_profiles
+
+    backend, splits = world
+    parts = partition_dirichlet(splits["train"], 4, beta=0.5, seed=0)
+    cd = []
+    for p in parts:
+        s = split_811(p, seed=1)
+        cd.append({"train": s["train"], "val": s["val"], "test": s["test"]})
+
+    cfg = DagAflConfig(n_clients=4, max_rounds=2, local_epochs=1,
+                       tip=TipSelectionConfig(n_select=2), seed=0,
+                       cohort_size=4, cohort_window=2.0)
+    coord = DagAflCoordinator(backend, cd, splits["test"], cfg,
+                              CostModel(local_epoch=2.0),
+                              make_profiles(4, 0.5, 0))
+    res = coord.run()
+
+    ok, reason = verify_full_dag(coord.ledger)
+    assert ok, reason
+    assert res.extra["cohorts_dispatched"] >= 1
+    # tracker cannot stop early here (min_updates=3 > the 2 monitor
+    # updates), so every client must complete every scheduled round —
+    # a stranded cohort window would show up as missing rounds
+    assert res.rounds == cfg.n_clients * cfg.max_rounds
+    assert res.sim_time > 0
+    # publishes happen at per-round completion times, not batched at flush:
+    # transaction timestamps must not collapse onto a handful of instants
+    stamps = {round(tx.timestamp, 6) for tx in coord.ledger.nodes.values()}
+    assert len(stamps) > res.extra["cohorts_dispatched"] + 1
+    init_acc = backend.evaluate(backend.init(jax.random.PRNGKey(0)),
+                                splits["test"])
+    assert res.final_accuracy > init_acc + 0.1
