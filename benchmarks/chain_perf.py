@@ -91,14 +91,23 @@ def bench_linear_chain(n_clients: int, n_tx: int = 300,
 def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
                          n_samples: int = 6000, max_rounds: int = 2,
                          local_epochs: int = 2, cohort_window: float = 2.0,
-                         seed: int = 0, warmup: bool = True
-                         ) -> Dict[str, float]:
+                         seed: int = 0, warmup: bool = True,
+                         mesh_devices: int = 0,
+                         clients_axis: str = "clients") -> Dict[str, float]:
     """Wall-clock: sequential DAG-AFL vs the K-client cohort engine.
 
     Same backend, same data, same simulated-cost model and seed; the only
     difference is the execution engine.  Reports wall seconds, speedup, and
     both runs' final accuracy (the engines must agree on learning outcome,
     not just on speed).
+
+    ``mesh_devices > 1`` additionally measures the mesh-sharded SPMD engine
+    (``shard_map`` over a ``clients`` axis of that many devices, clamped to
+    what the host has — use ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=N`` on CPU): a third run on the same data reports the sharded
+    wall clock, its speedup vs sequential, and its accuracy gap vs the
+    single-device cohort path (``mesh_accuracy_gap`` — numerics must agree
+    across partitionings, not just engines).
     """
     import jax  # noqa: F401  (ensures backend selected before timing)
 
@@ -123,6 +132,14 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
     backend = CNNBackend(vgg_for("mnist"), local_epochs=local_epochs,
                          batch_size=32)
     engine = CohortBackend(backend, capacity=cohort_size)
+    engine_sharded = None
+    if mesh_devices and mesh_devices > 1:
+        from repro.launch.mesh import make_cohort_mesh
+        mesh = make_cohort_mesh(mesh_devices, axis=clients_axis)
+        engine_sharded = CohortBackend(backend, capacity=cohort_size,
+                                       mesh=mesh, clients_axis=clients_axis)
+        if engine_sharded.mesh is None:       # host clamped to one device
+            engine_sharded = None
     profiles = make_profiles(n_clients, 0.5, seed)
 
     def run(csize, rounds, eng):
@@ -138,15 +155,17 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
         return time.perf_counter() - t0, res
 
     if warmup:
-        # compile both paths out of the timing with a full-geometry clone:
-        # a shorter warm-up run forms different cohort-size buckets and
-        # leaves some programs to compile inside the measured region
+        # compile every measured path out of the timing with full-geometry
+        # clones: a shorter warm-up run forms different cohort-size buckets
+        # and leaves some programs to compile inside the measured region
         run(1, max_rounds, None)
         run(cohort_size, max_rounds, engine)
+        if engine_sharded is not None:
+            run(cohort_size, max_rounds, engine_sharded)
 
     t_seq, res_seq = run(1, max_rounds, None)
     t_coh, res_coh = run(cohort_size, max_rounds, engine)
-    return {
+    out = {
         "seq_wall_s": t_seq,
         "cohort_wall_s": t_coh,
         "speedup": t_seq / max(t_coh, 1e-9),
@@ -159,17 +178,42 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
         "rounds": res_coh.rounds,
         "cohorts_dispatched": res_coh.extra["cohorts_dispatched"],
     }
+    if engine_sharded is not None:
+        t_sh, res_sh = run(cohort_size, max_rounds, engine_sharded)
+        out.update({
+            "mesh_devices": int(
+                dict(engine_sharded.mesh.shape)[clients_axis]),
+            "sharded_wall_s": t_sh,
+            "sharded_speedup": t_seq / max(t_sh, 1e-9),
+            "sharded_vs_cohort_speedup": t_coh / max(t_sh, 1e-9),
+            "sharded_accuracy": res_sh.final_accuracy,
+            # numerics contract: mesh partitioning must not change learning
+            "mesh_accuracy_gap": abs(res_sh.final_accuracy
+                                     - res_coh.final_accuracy),
+        })
+    return out
 
 
 def cohort_rows(result: Dict[str, float], n_clients: int,
                 cohort_size: int) -> list:
     tag = f"n{n_clients}_k{cohort_size}"
-    return [
+    rows = [
         f"cohort_speedup[{tag}],"
         f"{result['cohort_wall_s']*1e6:.0f},{result['speedup']:.2f}",
         f"cohort_acc_gap[{tag}],"
         f"{result['seq_wall_s']*1e6:.0f},{result['accuracy_gap']*100:.2f}",
     ]
+    if "sharded_wall_s" in result:
+        mtag = f"{tag}_d{result['mesh_devices']}"
+        rows += [
+            f"cohort_sharded_speedup[{mtag}],"
+            f"{result['sharded_wall_s']*1e6:.0f},"
+            f"{result['sharded_speedup']:.2f}",
+            f"cohort_mesh_acc_gap[{mtag}],"
+            f"{result['sharded_wall_s']*1e6:.0f},"
+            f"{result['mesh_accuracy_gap']*100:.2f}",
+        ]
+    return rows
 
 
 def run_chain_perf(out_dir: str = "experiments/fl"):
@@ -199,6 +243,12 @@ def main() -> None:
                     help="measure the cohort engine at this batch size "
                          "(0 = ledger micro-benchmarks only)")
     ap.add_argument("--n-clients", type=int, default=16)
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="also measure the shard_map SPMD engine on a "
+                         "clients-axis mesh of this many devices (clamped "
+                         "to the host; 0/1 = single-device only)")
+    ap.add_argument("--clients-axis", default="clients",
+                    help="mesh axis name the cohort programs shard over")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke geometry (small data, one round)")
     ap.add_argument("--out-dir", default="experiments/fl")
@@ -209,7 +259,9 @@ def main() -> None:
         kw = dict(n_samples=1500, max_rounds=1, local_epochs=1) \
             if args.quick else {}
         res = bench_cohort_speedup(n_clients=args.n_clients,
-                                   cohort_size=args.cohort_size, **kw)
+                                   cohort_size=args.cohort_size,
+                                   mesh_devices=args.mesh,
+                                   clients_axis=args.clients_axis, **kw)
         for r in cohort_rows(res, args.n_clients, args.cohort_size):
             print(r)
         print(f"# sequential {res['seq_wall_s']:.1f}s "
@@ -217,6 +269,16 @@ def main() -> None:
               f"{res['cohort_wall_s']:.1f}s (acc {res['cohort_accuracy']:.3f})"
               f" -> {res['speedup']:.2f}x, "
               f"{res['cohorts_dispatched']} cohorts")
+        if "sharded_wall_s" in res:
+            print(f"# sharded ({res['mesh_devices']} devices) "
+                  f"{res['sharded_wall_s']:.1f}s "
+                  f"(acc {res['sharded_accuracy']:.3f}) -> "
+                  f"{res['sharded_speedup']:.2f}x vs sequential, "
+                  f"mesh acc gap {res['mesh_accuracy_gap']*100:.2f} pts")
+        elif args.mesh and args.mesh > 1:
+            print("# mesh requested but host has one device; sharded run "
+                  "skipped (set XLA_FLAGS=--xla_force_host_platform_"
+                  "device_count=N)")
         os.makedirs(args.out_dir, exist_ok=True)
         with open(os.path.join(args.out_dir, "cohort_speedup.json"),
                   "w") as f:

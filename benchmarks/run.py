@@ -25,6 +25,9 @@ def main() -> None:
                          "this batch size (cohort_speedup[...] rows)")
     ap.add_argument("--n-clients", type=int, default=16,
                     help="client count for the cohort engine benchmark")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="also benchmark the mesh-sharded SPMD cohort "
+                         "engine on this many devices (0 = skip)")
     args = ap.parse_args()
 
     rows = []
@@ -35,11 +38,17 @@ def main() -> None:
 
     if args.cohort_size:
         res = chain_perf.bench_cohort_speedup(
-            n_clients=args.n_clients, cohort_size=args.cohort_size)
+            n_clients=args.n_clients, cohort_size=args.cohort_size,
+            mesh_devices=args.mesh)
         rows += chain_perf.cohort_rows(res, args.n_clients, args.cohort_size)
         print(f"# cohort engine: {res['speedup']:.2f}x wall-clock, "
               f"accuracy gap {res['accuracy_gap']*100:.2f} pts",
               file=sys.stderr)
+        if "sharded_speedup" in res:
+            print(f"# sharded cohort engine ({res['mesh_devices']} devices): "
+                  f"{res['sharded_speedup']:.2f}x wall-clock, mesh accuracy "
+                  f"gap {res['mesh_accuracy_gap']*100:.2f} pts",
+                  file=sys.stderr)
 
     from benchmarks import roofline
     records = roofline.load()

@@ -6,7 +6,8 @@ event-driven coordinator that ties them together.
 """
 from repro.core.aggregate import (tree_interpolate, tree_mean,
                                   tree_size_bytes, tree_weighted)
-from repro.core.coordinator import DagAflConfig, DagAflCoordinator
+from repro.core.coordinator import (DagAflConfig, DagAflCoordinator,
+                                    resolve_cohort_mesh)
 from repro.core.dag import (DAGLedger, ModelStore, Transaction, TxMetadata,
                             compute_tx_hash)
 from repro.core.signature import (SimilarityContract, cosine_similarity,
@@ -26,4 +27,5 @@ __all__ = [
     "ValidationPath", "extract_path", "verify_path", "verify_full_dag",
     "ClientProfile", "ConvergenceTracker", "CostModel", "EventLoop",
     "RunResult", "make_profiles", "DagAflConfig", "DagAflCoordinator",
+    "resolve_cohort_mesh",
 ]

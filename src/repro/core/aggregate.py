@@ -41,6 +41,89 @@ def tree_weighted(models: Sequence, weights: Sequence[float]):
 # The cohort execution engine keeps K client models stacked as ONE pytree
 # whose leaves carry a leading client axis.  Aggregating over that axis is a
 # single XLA reduction instead of K Python-level ``tree_mean`` calls.
+#
+# With a device mesh carrying a ``clients`` axis (see
+# ``repro.launch.mesh.make_cohort_mesh``), the stacked axis lives sharded
+# across devices; ``stacked_mean`` / ``stacked_weighted`` then reduce it with
+# ``shard_map`` + ``lax.psum`` cross-device collectives — each device sums
+# its local client shard, one psum produces the Eq. 6 aggregate replicated
+# everywhere.  ``mesh=None`` (the default) keeps the single-device programs
+# bit-for-bit as before.
+
+
+def round_up_multiple(x: int, n: int) -> int:
+    """Smallest multiple of ``n`` that is >= ``x`` (the mesh-divisibility
+    pad target for stacked client/model axes)."""
+    return -(-x // n) * n
+
+
+def pad_leading(arr, target: int):
+    """Zero-pad the leading axis of ``arr`` out to ``target`` rows."""
+    if arr.shape[0] == target:
+        return arr
+    pad = [(0, target - arr.shape[0])] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, pad)
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= ``x`` (>= 1): the shared shape-quantization
+    policy that keeps jitted program families bounded at ~log2."""
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def _quantized_target(x: int, n: int) -> int:
+    """Pad target for a sharded stacked axis: next power of two >= ``x``,
+    rounded up to a multiple of the mesh size ``n``.  The power-of-two
+    quantization bounds the psum reducers' compiled-program family at
+    ~log2 of the largest window (K and M vary every cohort window; padding
+    to the bare multiple would recompile per geometry)."""
+    return round_up_multiple(next_pow2(x), n)
+
+
+_COLLECTIVE_CACHE = {}
+
+
+def _psum_reducer(mesh, axis_name: str, kind: str):
+    """Cached jitted shard_map programs reducing a LIST of float leaves whose
+    leading axis is sharded over ``axis_name``.
+
+    ``sum``:  leaves (M, ...) -> total over M, replicated.
+    ``wsum``: leaves (M, ...) + weights (K, M) -> (K, ...) einsum, replicated.
+    Padding rows must carry zeros (zero weight) — they fall out of the sum.
+    """
+    key = (mesh, axis_name, kind)
+    fn = _COLLECTIVE_CACHE.get(key)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if kind == "sum":
+        def local(leaves):
+            return [jax.lax.psum(jnp.sum(l, axis=0), axis_name)
+                    for l in leaves]
+        fn = jax.jit(shard_map(local, mesh=mesh, in_specs=(P(axis_name),),
+                               out_specs=P()))
+    elif kind == "wsum":
+        def local(leaves, w):
+            return [jax.lax.psum(jnp.einsum("km,m...->k...", w, l), axis_name)
+                    for l in leaves]
+        fn = jax.jit(shard_map(local, mesh=mesh,
+                               in_specs=(P(axis_name), P(None, axis_name)),
+                               out_specs=P()))
+    else:
+        raise ValueError(kind)
+    _COLLECTIVE_CACHE[key] = fn
+    return fn
+
+
+def _mesh_axis_size(mesh, axis_name: str) -> int:
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(axis_name, 1))
 
 
 def tree_stack(models: Sequence):
@@ -57,24 +140,78 @@ def tree_unstack(stacked) -> list:
 
 
 @jax.jit
-def stacked_mean(stacked):
-    """Eq. 6 over a stacked tree: mean over the leading client axis."""
+def _stacked_mean_single(stacked):
     return jax.tree_util.tree_map(
         lambda leaf: jnp.mean(leaf.astype(jnp.float32), axis=0)
         if jnp.issubdtype(leaf.dtype, jnp.floating) else leaf[0], stacked)
 
 
-def stacked_weighted(stacked, weights):
+def stacked_mean(stacked, mesh=None, axis_name: str = "clients"):
+    """Eq. 6 over a stacked tree: mean over the leading client axis.
+
+    With a ``mesh`` whose ``axis_name`` axis is larger than one, the leading
+    axis is treated as sharded over it: each device part-sums its local
+    clients and one ``psum`` yields the mean (leading axis zero-padded to a
+    mesh-size multiple; zeros drop out of the sum, the divisor stays K)."""
+    n = _mesh_axis_size(mesh, axis_name)
+    if n <= 1:
+        return _stacked_mean_single(stacked)
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    k = int(leaves[0].shape[0])
+    target = _quantized_target(k, n)
+    is_f = [jnp.issubdtype(l.dtype, jnp.floating) for l in leaves]
+    floats = [pad_leading(l.astype(jnp.float32), target)
+              for l, f in zip(leaves, is_f) if f]
+    summed = iter(_psum_reducer(mesh, axis_name, "sum")(floats)
+                  if floats else [])
+    out = [next(summed) / k if f else l[0] for l, f in zip(leaves, is_f)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stacked_weighted(stacked, weights, mesh=None, axis_name: str = "clients"):
     """Weighted aggregation over a stacked tree's leading axis M.
 
     ``weights`` of shape (M,) produces one aggregate tree;  shape (K, M)
     produces a stacked tree of K aggregates in one einsum per leaf — the
     cohort path's "aggregate every client's tip selection at once", where
     row k holds client k's (normalised) weights over the M stacked models.
+
+    With a ``mesh``, the M axis is sharded over ``axis_name``: each device
+    einsums its local models against its weight columns and one ``psum``
+    assembles the (K, ...) aggregates (M zero-padded to a mesh-size
+    multiple with zero weights — identical math).
     """
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
     batched = w.ndim == 2
+
+    n = _mesh_axis_size(mesh, axis_name)
+    if n > 1:
+        leaves, treedef = jax.tree_util.tree_flatten(stacked)
+        m = int(leaves[0].shape[0])
+        target = _quantized_target(m, n)
+        # quantize BOTH stacked axes: K (weight rows) and M (models) vary
+        # every cohort window, and each shape pair is a compiled program
+        w2 = w if batched else w[None]
+        k = int(w2.shape[0])
+        k_pad = _quantized_target(k, 1)
+        w2 = jnp.pad(w2, ((0, k_pad - k), (0, target - m)))
+        is_f = [jnp.issubdtype(l.dtype, jnp.floating) for l in leaves]
+        floats = [pad_leading(l.astype(jnp.float32), target)
+                  for l, f in zip(leaves, is_f) if f]
+        red = iter(_psum_reducer(mesh, axis_name, "wsum")(floats, w2)
+                   if floats else [])
+
+        def pick(l, f):
+            if f:
+                r = next(red)
+                return r[:k] if batched else r[0]
+            if batched:
+                return jnp.broadcast_to(l[0], (k,) + l.shape[1:])
+            return l[0]
+
+        out = [pick(l, f) for l, f in zip(leaves, is_f)]
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     def combine(leaf):
         if not jnp.issubdtype(leaf.dtype, jnp.floating):

@@ -66,6 +66,25 @@ class DagAflConfig:
     # keep it below the typical round duration — a publish whose completion
     # time falls before the window flushes is clamped to the flush time
     cohort_window: float = 1.0
+    # SPMD cohort execution: "auto" builds a clients-axis mesh clamped to
+    # this host's devices (1 device => exact single-device path), None
+    # forces single-device, or pass a jax.sharding.Mesh carrying
+    # ``clients_axis`` (extra data/model axes compose — they are simply
+    # replicated over by the cohort programs)
+    mesh: object = "auto"
+    clients_axis: str = "clients"
+
+
+def resolve_cohort_mesh(mesh, cohort_size: int, clients_axis: str = "clients"):
+    """``"auto"`` -> a clients mesh clamped to this host's devices (never
+    raises; 1 device degrades to the single-device engine), ``None`` ->
+    single-device, a Mesh -> itself."""
+    if isinstance(mesh, str):
+        if mesh != "auto":
+            raise ValueError(f"mesh must be 'auto', None or a Mesh: {mesh!r}")
+        from repro.launch.mesh import make_cohort_mesh
+        return make_cohort_mesh(cohort_size, axis=clients_axis)
+    return mesh
 
 
 class DagAflCoordinator:
@@ -107,7 +126,11 @@ class DagAflCoordinator:
                 self.cohort = cohort_engine
             elif CohortBackend.supports(backend):
                 self.cohort = CohortBackend(backend,
-                                            capacity=cfg.cohort_size)
+                                            capacity=cfg.cohort_size,
+                                            mesh=resolve_cohort_mesh(
+                                                cfg.mesh, cfg.cohort_size,
+                                                cfg.clients_axis),
+                                            clients_axis=cfg.clients_axis)
             if self.cohort is not None:
                 self.cohort.register_shards(
                     [client_data[c]["train"] for c in range(cfg.n_clients)],
@@ -295,8 +318,13 @@ class DagAflCoordinator:
         for k, rd in enumerate(rounds):
             for r in rd["refs"]:
                 weights[k, ref_pos[r]] = 1.0
+        # under a mesh this is the window's cross-device collective: the M
+        # stacked tip models shard over the clients axis and one psum-einsum
+        # yields every client's Eq. 6 aggregate (see core/aggregate.py)
         stacked_tips = tree_stack([self.store.get(r) for r in uniq])
-        agg_stacked = stacked_weighted(stacked_tips, weights)
+        agg_stacked = stacked_weighted(stacked_tips, weights,
+                                       mesh=self.cohort.mesh,
+                                       axis_name=self.cohort.clients_axis)
 
         # batched local training + validation + signature extraction
         train_sets = [self.client_data[rd["client"]]["train"] for rd in rounds]

@@ -46,6 +46,9 @@ class FLConfig:
     # into one vmapped program (1 = sequential reference path)
     cohort_size: int = 1
     cohort_window: float = 1.0
+    # SPMD cohort execution (see DagAflConfig.mesh): "auto" | None | Mesh
+    mesh: object = "auto"
+    clients_axis: str = "clients"
     # algorithm-specific knobs
     fedasync_alpha: float = 0.6
     fedasync_staleness: str = "poly"     # poly | constant
@@ -72,10 +75,15 @@ class _Harness:
         self.key = jax.random.PRNGKey(cfg.seed)
         self.cohort = None
         if cfg.cohort_size > 1:
+            from repro.core.coordinator import resolve_cohort_mesh
             from repro.fl.cohort import CohortBackend
             if CohortBackend.supports(backend):
                 self.cohort = CohortBackend(backend,
-                                            capacity=cfg.cohort_size)
+                                            capacity=cfg.cohort_size,
+                                            mesh=resolve_cohort_mesh(
+                                                cfg.mesh, cfg.cohort_size,
+                                                cfg.clients_axis),
+                                            clients_axis=cfg.clients_axis)
                 self.cohort.register_shards(
                     [client_data[c]["train"] for c in range(cfg.n_clients)],
                     epochs=cfg.local_epochs)
@@ -425,7 +433,8 @@ def run_dagfl(backend, client_data, global_test, cfg: FLConfig,
         local_epochs=cfg.local_epochs, target_accuracy=cfg.target_accuracy,
         patience=cfg.patience, heterogeneity=cfg.heterogeneity, seed=cfg.seed,
         verify_paths=False, cohort_size=cfg.cohort_size,
-        cohort_window=cfg.cohort_window,
+        cohort_window=cfg.cohort_window, mesh=cfg.mesh,
+        clients_axis=cfg.clients_axis,
         tip=TipSelectionConfig(n_select=cfg.dagfl_n_select, lam=0.0,
                                use_freshness=False, use_similarity=False,
                                p_similar=max(cfg.n_clients, 8)))
@@ -446,6 +455,7 @@ def run_dagafl(backend, client_data, global_test, cfg: FLConfig,
         local_epochs=cfg.local_epochs, target_accuracy=cfg.target_accuracy,
         patience=cfg.patience, heterogeneity=cfg.heterogeneity, seed=cfg.seed,
         cohort_size=cfg.cohort_size, cohort_window=cfg.cohort_window,
+        mesh=cfg.mesh, clients_axis=cfg.clients_axis,
         tip=tip_cfg or TipSelectionConfig())
     coord = DagAflCoordinator(backend, client_data, global_test, dcfg,
                               cost, profiles)

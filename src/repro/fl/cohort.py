@@ -27,6 +27,22 @@ maximum, and eval/signature sample axes to per-call targets quantized by
 ``eval_pad_quantum`` — so steady-state dispatches hit a bounded set of
 compiled programs instead of retracing.
 
+SPMD over a device mesh: passing ``mesh`` (any ``jax.sharding.Mesh`` whose
+``clients_axis`` axis has more than one device — see
+``repro.launch.mesh.make_cohort_mesh``) turns every batched program into one
+``shard_map`` SPMD program: the stacked client axis is sharded over the mesh
+so each device runs the vmapped train step (and the lax.map-fused
+eval/signature programs) on its own client group, with no cross-device
+communication inside a window — client rounds are embarrassingly parallel;
+the cross-device work is the window's Eq. 6 aggregation, which
+``repro.core.aggregate`` phrases as psum collectives over the same axis.
+Cohort padding rounds up to a mesh-size multiple so the groups divide
+evenly; masking keeps the padding out of every result exactly as on one
+device.  ``mesh=None`` (or a 1-device mesh) is bit-for-bit today's
+single-device path.  Extra mesh axes (``data``/``model`` from
+``repro.launch.mesh``) compose: these programs only consume ``clients_axis``
+and replicate over the rest.
+
 Currently implemented for :class:`repro.fl.backend.CNNBackend` (the
 paper-faithful VGG path used by the coordinator, baselines and benchmarks);
 ``CohortBackend.supports`` lets callers fall back to the sequential path for
@@ -40,7 +56,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregate import tree_stack, tree_unstack
+from repro.core.aggregate import (next_pow2, pad_leading, round_up_multiple,
+                                  tree_stack, tree_unstack)
 from repro.data.synthetic import Dataset
 from repro.fl.backend import CNNBackend
 from repro.optim.optimizers import apply_updates
@@ -82,13 +99,6 @@ def _max_pool_2x2(x):
     return jnp.max(x, axis=(2, 4))
 
 
-def _pad_axis0(arr: jnp.ndarray, target: int) -> jnp.ndarray:
-    if arr.shape[0] == target:
-        return arr
-    pad = [(0, target - arr.shape[0])] + [(0, 0)] * (arr.ndim - 1)
-    return jnp.pad(arr, pad)
-
-
 class CohortBackend:
     """Batched train/eval/signature over a stacked K-client pytree.
 
@@ -98,7 +108,8 @@ class CohortBackend:
     """
 
     def __init__(self, backend: CNNBackend, capacity: Optional[int] = None,
-                 eval_pad_quantum: int = 64):
+                 eval_pad_quantum: int = 64, mesh=None,
+                 clients_axis: str = "clients"):
         if not self.supports(backend):
             raise TypeError(
                 f"CohortBackend supports CNNBackend, got {type(backend)}")
@@ -112,11 +123,47 @@ class CohortBackend:
         self.opt = backend.opt
         self._pad_T = 0            # monotone step-axis pad target
         self._eval_data_cache: Dict = {}
-        self._train_jit = jax.jit(self._train_impl)
-        self._eval_jit = jax.jit(self._eval_impl)
-        self._eval_shared_jit = jax.jit(self._eval_shared_impl)
-        self._eval_many_jit = jax.jit(self._eval_many_impl)
-        self._sig_jit = jax.jit(self._sig_impl)
+        # a 1-device (or absent) clients axis degrades to the exact
+        # single-device programs — same jit cache, same numerics
+        self.clients_axis = clients_axis
+        self.mesh = None
+        if mesh is not None:
+            if clients_axis not in mesh.shape:
+                raise ValueError(
+                    f"mesh axes {tuple(mesh.axis_names)} carry no "
+                    f"{clients_axis!r} axis")
+            if int(dict(mesh.shape)[clients_axis]) > 1:
+                self.mesh = mesh
+        self._n_shards = (int(dict(self.mesh.shape)[clients_axis])
+                          if self.mesh is not None else 1)
+        if self.mesh is None:
+            self._train_jit = jax.jit(self._train_impl)
+            self._eval_jit = jax.jit(self._eval_impl)
+            self._eval_shared_jit = jax.jit(self._eval_shared_impl)
+            self._eval_many_jit = jax.jit(self._eval_many_impl)
+            self._sig_jit = jax.jit(self._sig_impl)
+        else:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec
+            c, r = PartitionSpec(clients_axis), PartitionSpec()
+
+            def spmd(fn, in_specs, out_specs):
+                """Client-axis SPMD: each device runs ``fn`` on its local
+                client group; there are no collectives inside — aggregation
+                happens in ``repro.core.aggregate``'s psum programs."""
+                return jax.jit(shard_map(fn, mesh=self.mesh,
+                                         in_specs=in_specs,
+                                         out_specs=out_specs))
+
+            self._train_jit = spmd(self._train_impl, (c, c, c, c), (c, c))
+            self._eval_jit = spmd(self._eval_impl, (c, c, c, c), c)
+            # shared model replicated, K val shards sharded over clients
+            self._eval_shared_jit = spmd(self._eval_shared_impl,
+                                         (r, c, c, c), c)
+            # M candidate models sharded, the one val shard replicated
+            self._eval_many_jit = spmd(self._eval_many_impl,
+                                       (c, r, r, r), c)
+            self._sig_jit = spmd(self._sig_impl, (c, c, c), c)
 
     @staticmethod
     def supports(backend) -> bool:
@@ -146,11 +193,8 @@ class CohortBackend:
         multiples above it (bounded compile count either way)."""
         c = self.eval_pad_quantum
         if n >= c:
-            return -(-n // c) * c
-        p = 1
-        while p < n:
-            p *= 2
-        return p
+            return round_up_multiple(n, c)
+        return next_pow2(n)
 
     # -- jitted programs ----------------------------------------------------
 
@@ -297,8 +341,8 @@ class CohortBackend:
 
         self._pad_T = max(self._pad_T, *steps)
         T = self._pad_T
-        xb = jnp.stack([_pad_axis0(x, T) for x in xs_all])
-        yb = jnp.stack([_pad_axis0(y, T) for y in ys_all])
+        xb = jnp.stack([pad_leading(x, T) for x in xs_all])
+        yb = jnp.stack([pad_leading(y, T) for y in ys_all])
         mask = jnp.stack([
             jnp.arange(T) < s for s in jnp.asarray(steps)]).astype(jnp.float32)
         return xb, yb, mask, steps
@@ -307,13 +351,15 @@ class CohortBackend:
         """Pad the cohort axis to the next power of two (capped at
         ``capacity``) with fully-masked repeats: short cohorts waste at most
         2x compute while the jit cache stays bounded at log2(capacity)
-        programs per shape family."""
+        programs per shape family.  Under a mesh the target additionally
+        rounds up to a multiple of the clients-axis size, so the shard_map
+        groups divide evenly for any ragged cohort."""
         k = int(mask.shape[0])
-        target = 1
-        while target < k:
-            target *= 2
+        target = next_pow2(k)
         if self.capacity is not None:
             target = min(max(target, 1), max(self.capacity, k))
+        if self._n_shards > 1:
+            target = round_up_multiple(target, self._n_shards)
         if k >= target:
             return stacked, xb, yb, mask, k
         reps = target - k
@@ -340,16 +386,16 @@ class CohortBackend:
             hit = self._eval_data_cache.get(key)
             if hit is None:
                 own = self._round_chunk(n)
-                x1 = _pad_axis0(jnp.asarray(ds.x[:n]), own)
-                y1 = _pad_axis0(jnp.asarray(ds.y[:n]), own)
+                x1 = pad_leading(jnp.asarray(ds.x[:n]), own)
+                y1 = pad_leading(jnp.asarray(ds.y[:n]), own)
                 m1 = (jnp.arange(own) < n).astype(jnp.float32)
                 # hold ds so the id() key stays unique for our lifetime
                 hit = (ds, x1, y1, m1)
                 self._eval_data_cache[key] = hit
             singles.append(hit)
-        x = jnp.stack([_pad_axis0(s[1], target) for s in singles])
-        y = jnp.stack([_pad_axis0(s[2], target) for s in singles])
-        mask = jnp.stack([_pad_axis0(s[3], target) for s in singles])
+        x = jnp.stack([pad_leading(s[1], target) for s in singles])
+        y = jnp.stack([pad_leading(s[2], target) for s in singles])
+        mask = jnp.stack([pad_leading(s[3], target) for s in singles])
         return x, y, mask
 
     # -- public API ----------------------------------------------------------
@@ -365,6 +411,18 @@ class CohortBackend:
         xb, yb, mask, steps = self._prepare_train(datasets, seeds, epochs)
         stacked_params, xb, yb, mask, k = self._pad_cohort(
             stacked_params, xb, yb, mask)
+        if self.mesh is not None:
+            # place params AND batch arrays client-sharded BEFORE entering
+            # jit, so every host->mesh transfer happens once with the final
+            # layout instead of bouncing through device 0
+            from repro.sharding.rules import (cohort_pspec,
+                                              stacked_client_shardings)
+            from jax.sharding import NamedSharding
+            stacked_params = jax.device_put(
+                stacked_params, stacked_client_shardings(
+                    stacked_params, self.mesh, self.clients_axis))
+            sh = NamedSharding(self.mesh, cohort_pspec(self.clients_axis))
+            xb, yb, mask = (jax.device_put(a, sh) for a in (xb, yb, mask))
         new_params, losses = self._train_jit(stacked_params, xb, yb, mask)
         losses = np.asarray(losses)
         per_epoch = [s // epochs for s in steps]
@@ -399,8 +457,13 @@ class CohortBackend:
                         ) -> List[float]:
         """One model on K shards in one dispatch (publisher's monitor)."""
         x, y, mask = self._eval_arrays(datasets, limit)
+        k = int(x.shape[0])
+        if self._n_shards > 1 and k % self._n_shards:
+            t = round_up_multiple(k, self._n_shards)
+            x, y, mask = pad_leading(x, t), pad_leading(y, t), \
+                pad_leading(mask, t)
         accs = self._eval_shared_jit(params, x, y, mask)
-        return [float(a) for a in np.asarray(accs)]
+        return [float(a) for a in np.asarray(accs)[:k]]
 
     def evaluate_many(self, params_list, ds: Dataset,
                       limit: int = 512) -> List[float]:
@@ -416,9 +479,9 @@ class CohortBackend:
             # one candidate: the backend's conv-form program wins — no
             # stacking, no padding, and it shares the sequential jit cache
             return [self.backend.evaluate(params_list[0], ds, limit)]
-        m_pad = 1
-        while m_pad < m:
-            m_pad *= 2
+        m_pad = next_pow2(m)
+        if self._n_shards > 1:
+            m_pad = round_up_multiple(m_pad, self._n_shards)
         padded = list(params_list) + [params_list[-1]] * (m_pad - m)
         # sample axis padded to the shared eval target: compilations stay
         # bounded at log2(M) programs even with ragged validation shards

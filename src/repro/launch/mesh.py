@@ -26,15 +26,39 @@ def make_production_mesh(*, multi_pod: bool = False):
     return Mesh(dev, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many devices this host actually has (tests)."""
+def make_host_mesh(data: int = 1, model: int = 1, strict: bool = True):
+    """Small mesh over however many devices this host actually has (tests).
+
+    ``strict=False`` degrades instead of raising: the ``data`` axis shrinks
+    first (the ``model`` axis is kept while it fits, since shrinking it
+    changes which collectives a program needs); a ``model`` axis larger than
+    the host shrinks too rather than raise."""
     import jax
+    avail = len(jax.devices())
+    if data * model > avail:
+        if strict:
+            raise RuntimeError(f"need {data * model} devices, have {avail}")
+        model = min(model, avail)
+        data = max(avail // model, 1)
     n = data * model
     devices = jax.devices()[:n]
-    if len(devices) < n:
-        raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
     from jax.sharding import Mesh
     return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))
+
+
+def make_cohort_mesh(n_clients: int, axis: str = "clients"):
+    """1-D client-axis mesh for the SPMD cohort engine, clamped to the
+    devices this host actually has — it NEVER raises for lack of devices.
+
+    On a 1-device host it returns a 1-device mesh, which the cohort engine
+    treats as "no mesh" (the exact single-device ``vmap`` path), so callers
+    can use this unconditionally as their default.  Ask for more devices
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    any jax import) on CPU, e.g. in CI."""
+    import jax
+    n = max(1, min(int(n_clients), len(jax.devices())))
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:n]), (axis,))
 
 
 # TPU v5e hardware constants (roofline targets)

@@ -314,3 +314,28 @@ def cache_shardings(cache, cfg: ArchConfig, mesh: Mesh,
 def replicated(tree, mesh: Mesh):
     return jax.tree_util.tree_map(
         lambda _: NamedSharding(mesh, P()), tree)
+
+
+# -- cohort (stacked K-client) trees ----------------------------------------
+#
+# The FL cohort engine (repro.fl.cohort) keeps K client models stacked as one
+# pytree with a leading client axis.  Its SPMD layout is one rule: shard that
+# leading axis over the ``clients`` mesh axis, replicate everything else —
+# per-client model parallelism belongs to the per-leaf rules above and
+# composes via extra mesh axes, never by splitting a client's own dims here.
+
+
+def cohort_pspec(axis: str = "clients") -> P:
+    """PartitionSpec of a stacked-cohort leaf: leading client axis sharded."""
+    return P(axis)
+
+
+def stacked_client_shardings(stacked, mesh: Mesh, axis: str = "clients"):
+    """NamedShardings for a ``tree_stack``-ed K-client pytree: every leaf's
+    leading K axis over ``axis``, remaining dims replicated.  K must divide
+    ``mesh.shape[axis]`` times an integer — the cohort engine guarantees it
+    by padding the client axis to a multiple of the mesh size."""
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh {tuple(mesh.axis_names)} has no {axis!r} axis")
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, cohort_pspec(axis)), stacked)

@@ -1,0 +1,213 @@
+"""Mesh-sharded SPMD cohort engine: equivalence with the single-device path.
+
+The contract under test (ISSUE 2): sharding the stacked K-client pytree over
+a ``clients`` device mesh (``shard_map`` per-device client groups, psum
+aggregation collectives) is numerically equivalent to the single-device
+``vmap`` engine for ragged cohorts — including K not divisible by the mesh —
+and degrades to the EXACT single-device path on a 1-device host.
+
+Single-device hosts run the degradation/clamping tests and skip the rest;
+CI's multi-device job (``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+runs everything.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.cnn import vgg_for
+from repro.core.aggregate import (stacked_mean, stacked_weighted, tree_mean,
+                                  tree_stack, tree_unstack, tree_weighted)
+from repro.data import make_benchmark_dataset, split_811
+from repro.data.synthetic import Dataset
+from repro.fl.backend import CNNBackend
+from repro.fl.cohort import CohortBackend
+from repro.launch.mesh import make_cohort_mesh
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >=2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=N before jax import)")
+
+# matmul-form vs conv-form float tolerance (same as test_cohort.py); the
+# sharded path runs the SAME per-client programs, so it gets the same budget
+ATOL = 5e-3
+
+
+def _leaves_close(a, b, atol=ATOL):
+    return all(np.allclose(x, y, atol=atol) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_benchmark_dataset("mnist", n_samples=700, seed=2)
+    splits = split_811(ds)
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=1, batch_size=32)
+    return backend, splits
+
+
+def _shards(splits, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    train = splits["train"]
+    out = []
+    for s in sizes:
+        idx = rng.choice(len(train), size=s, replace=False)
+        out.append(Dataset(train.x[idx], train.y[idx]))
+    return out
+
+
+# -- mesh construction / degradation (run everywhere) ------------------------
+
+
+def test_make_cohort_mesh_clamps_to_available_devices():
+    mesh = make_cohort_mesh(10_000)
+    assert dict(mesh.shape)["clients"] == min(10_000, N_DEV)
+    assert make_cohort_mesh(1).axis_names == ("clients",)
+    assert dict(make_cohort_mesh(0).shape)["clients"] == 1  # floor at 1
+
+
+def test_one_device_mesh_degrades_to_single_device_engine(world):
+    backend, _ = world
+    engine = CohortBackend(backend, capacity=4, mesh=make_cohort_mesh(1))
+    assert engine.mesh is None          # exact single-device programs
+    assert engine._n_shards == 1
+
+
+def test_mesh_without_clients_axis_rejected(world):
+    backend, _ = world
+    from jax.sharding import Mesh
+    bad = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError, match="clients"):
+        CohortBackend(backend, capacity=4, mesh=bad)
+
+
+def test_make_host_mesh_degrades_when_not_strict():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(data=N_DEV + 7, model=1, strict=False)
+    assert dict(mesh.shape)["data"] == N_DEV
+    # an oversized MODEL axis must degrade too, not raise
+    mesh = make_host_mesh(data=1, model=N_DEV + 7, strict=False)
+    assert dict(mesh.shape)["model"] == N_DEV
+    with pytest.raises(RuntimeError):
+        make_host_mesh(data=N_DEV + 7, model=1)
+
+
+def test_stacked_client_shardings_specs(world):
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import stacked_client_shardings
+    backend, _ = world
+    mesh = make_cohort_mesh(max(N_DEV, 1))
+    stacked = tree_stack([backend.init(jax.random.PRNGKey(i))
+                          for i in range(2)])
+    sh = stacked_client_shardings(stacked, mesh)
+    for s in jax.tree_util.tree_leaves(sh):
+        assert s.spec == P("clients")
+    with pytest.raises(ValueError):
+        stacked_client_shardings(stacked, mesh, axis="nope")
+
+
+# -- psum aggregation collectives (property: any K/M vs the mesh) ------------
+
+
+@multi_device
+@settings(max_examples=4, deadline=None)
+@given(st.integers(2, 7), st.integers(0, 2 ** 31 - 1))
+def test_stacked_aggregation_collectives_match_single_device(m, seed):
+    """stacked_mean / stacked_weighted over a sharded model axis must equal
+    the listwise programs for ANY stack size, divisible by the mesh or not."""
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=1, batch_size=32)
+    mesh = make_cohort_mesh(min(N_DEV, 4))
+    rng = np.random.default_rng(seed)
+    models = [backend.init(jax.random.PRNGKey(int(rng.integers(1 << 30))))
+              for _ in range(m)]
+    stacked = tree_stack(models)
+
+    assert _leaves_close(stacked_mean(stacked, mesh=mesh),
+                         tree_mean(models), atol=1e-6)
+
+    w = rng.random((2, m)).astype(np.float32) + 0.01
+    per_client = tree_unstack(stacked_weighted(stacked, w, mesh=mesh))
+    for k in range(2):
+        assert _leaves_close(per_client[k],
+                             tree_weighted(models, list(w[k])), atol=1e-6)
+    flat = stacked_weighted(stacked, list(w[0]), mesh=mesh)
+    assert _leaves_close(flat, tree_weighted(models, list(w[0])), atol=1e-6)
+
+
+# -- sharded train/eval/signature equivalence (the tentpole contract) --------
+
+
+@multi_device
+@settings(max_examples=2, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+def test_sharded_cohort_matches_single_device(n_clients, seed):
+    """Ragged cohorts (K possibly not divisible by the mesh): the shard_map
+    engine must produce the same per-client weights, accuracies and
+    signatures as the single-device vmap engine."""
+    ds = make_benchmark_dataset("mnist", n_samples=500, seed=3)
+    splits = split_811(ds)
+    rng = np.random.default_rng(seed)
+    sizes = [int(rng.integers(40, 140)) for _ in range(n_clients)]
+    shards = _shards(splits, sizes, seed % 1000)
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=1, batch_size=32)
+    mesh = make_cohort_mesh(min(N_DEV, 4))
+    single = CohortBackend(backend, capacity=n_clients)
+    sharded = CohortBackend(backend, capacity=n_clients, mesh=mesh)
+    params = [backend.init(jax.random.PRNGKey(seed % 5 + i))
+              for i in range(n_clients)]
+    seeds = [int(rng.integers(2 ** 31)) for _ in range(n_clients)]
+
+    p1, l1 = single.train_cohort(params, shards, seeds)
+    p2, l2 = sharded.train_cohort(params, shards, seeds)
+    for i in range(n_clients):
+        assert _leaves_close(p1[i], p2[i]), f"client {i} diverged"
+        assert l1[i] == pytest.approx(l2[i], abs=5e-2)
+
+    assert np.allclose(single.evaluate_cohort(p1, shards),
+                       sharded.evaluate_cohort(p2, shards), atol=1e-4)
+    assert np.allclose(single.signature_cohort(p1, shards),
+                       sharded.signature_cohort(p2, shards), atol=1e-2)
+    assert np.allclose(single.evaluate_shared(p1[0], shards),
+                       sharded.evaluate_shared(p2[0], shards), atol=1e-4)
+    assert np.allclose(single.evaluate_many(p1, shards[0]),
+                       sharded.evaluate_many(p2, shards[0]), atol=1e-4)
+
+
+@multi_device
+def test_coordinator_auto_mesh_runs_spmd(world):
+    """End-to-end: the default (mesh="auto") coordinator on a multi-device
+    host takes the shard_map path, completes every round, and matches the
+    explicitly single-device run's final accuracy."""
+    from repro.core import (DagAflConfig, DagAflCoordinator,
+                            TipSelectionConfig, verify_full_dag)
+    from repro.core.simulator import CostModel, make_profiles
+
+    backend, splits = world
+    from repro.data import partition_dirichlet
+    parts = partition_dirichlet(splits["train"], 4, beta=0.5, seed=0)
+    cd = []
+    for p in parts:
+        s = split_811(p, seed=1)
+        cd.append({"train": s["train"], "val": s["val"], "test": s["test"]})
+
+    accs = {}
+    for mesh in ("auto", None):
+        cfg = DagAflConfig(n_clients=4, max_rounds=2, local_epochs=1,
+                           tip=TipSelectionConfig(n_select=2), seed=0,
+                           cohort_size=4, cohort_window=2.0, mesh=mesh)
+        coord = DagAflCoordinator(backend, cd, splits["test"], cfg,
+                                  CostModel(local_epoch=2.0),
+                                  make_profiles(4, 0.5, 0))
+        if mesh == "auto":
+            assert coord.cohort.mesh is not None      # SPMD path engaged
+            assert coord.cohort._n_shards == min(N_DEV, 4)
+        res = coord.run()
+        ok, reason = verify_full_dag(coord.ledger)
+        assert ok, reason
+        assert res.rounds == cfg.n_clients * cfg.max_rounds
+        accs[mesh] = res.final_accuracy
+    # tolerance = one argmax flip on this world's ~70-sample test set
+    # (1/70 ~= 0.0143): the sharded path reorders float reductions, so a
+    # single borderline prediction may legitimately flip
+    assert abs(accs["auto"] - accs[None]) <= 0.02
