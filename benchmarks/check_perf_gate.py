@@ -31,9 +31,23 @@ DEFAULT_THRESHOLDS = os.path.join(os.path.dirname(__file__),
                                   "baseline_thresholds.json")
 
 
+def active_thresholds(thresholds: dict, results: dict) -> dict:
+    """Per-backend floors: the top-level keys gate the default (cnn) smoke;
+    a sub-dict keyed by the results' ``backend`` field (e.g. ``"lm"``)
+    overrides them for that suite's smoke."""
+    sub = thresholds.get(results.get("backend", "cnn"))
+    if isinstance(sub, dict):
+        merged = {k: v for k, v in thresholds.items()
+                  if not isinstance(v, dict)}
+        merged.update(sub)
+        return merged
+    return thresholds
+
+
 def check(results: dict, thresholds: dict, quick: bool = False) -> list:
     """Returns a list of failure strings (empty = gate passes)."""
     failures = []
+    thresholds = active_thresholds(thresholds, results)
     floor = thresholds["cohort_speedup_min"]
     if quick:
         floor *= thresholds.get("quick_speedup_factor", 1.0)
@@ -84,7 +98,8 @@ def main() -> None:
         failures.append("--require-mesh: no sharded-engine results; the "
                         "multi-device smoke did not exercise shard_map")
 
-    print(f"perf gate: speedup={results.get('speedup', float('nan')):.2f}x "
+    print(f"perf gate[{results.get('backend', 'cnn')}]: "
+          f"speedup={results.get('speedup', float('nan')):.2f}x "
           f"acc_gap={results.get('accuracy_gap', float('nan')):.4f} "
           f"mesh_acc_gap={results.get('mesh_accuracy_gap', float('nan')):.4f}"
           f" sharded_speedup="

@@ -76,15 +76,9 @@ class DagAflConfig:
 
 
 def resolve_cohort_mesh(mesh, cohort_size: int, clients_axis: str = "clients"):
-    """``"auto"`` -> a clients mesh clamped to this host's devices (never
-    raises; 1 device degrades to the single-device engine), ``None`` ->
-    single-device, a Mesh -> itself."""
-    if isinstance(mesh, str):
-        if mesh != "auto":
-            raise ValueError(f"mesh must be 'auto', None or a Mesh: {mesh!r}")
-        from repro.launch.mesh import make_cohort_mesh
-        return make_cohort_mesh(cohort_size, axis=clients_axis)
-    return mesh
+    """Back-compat alias for :func:`repro.fl.cohort.resolve_cohort_mesh`."""
+    from repro.fl.cohort import resolve_cohort_mesh as _resolve
+    return _resolve(mesh, cohort_size, clients_axis)
 
 
 class DagAflCoordinator:
@@ -121,20 +115,20 @@ class DagAflCoordinator:
         self.cohort = None
         self._window: Optional[CohortWindow] = None
         if cfg.cohort_size > 1:
-            from repro.fl.cohort import CohortBackend
+            # backend-agnostic: build_cohort_engine consults the cohort
+            # program registry (CNN, LM, ...) and returns None for backends
+            # without a batched program suite — those stay sequential
+            from repro.fl.cohort import build_cohort_engine
+            shards = [client_data[c]["train"] for c in range(cfg.n_clients)]
             if cohort_engine is not None:
                 self.cohort = cohort_engine
-            elif CohortBackend.supports(backend):
-                self.cohort = CohortBackend(backend,
-                                            capacity=cfg.cohort_size,
-                                            mesh=resolve_cohort_mesh(
-                                                cfg.mesh, cfg.cohort_size,
-                                                cfg.clients_axis),
-                                            clients_axis=cfg.clients_axis)
-            if self.cohort is not None:
-                self.cohort.register_shards(
-                    [client_data[c]["train"] for c in range(cfg.n_clients)],
+                self.cohort.register_shards(shards, epochs=cfg.local_epochs)
+            else:
+                self.cohort = build_cohort_engine(
+                    backend, shards, cohort_size=cfg.cohort_size,
+                    mesh=cfg.mesh, clients_axis=cfg.clients_axis,
                     epochs=cfg.local_epochs)
+            if self.cohort is not None:
                 self._window = CohortWindow(
                     self.loop, cfg.cohort_size, cfg.cohort_window,
                     self._flush_cohort, lambda: self.tracker.done)

@@ -102,6 +102,11 @@ class DAGLedger:
         self._tips: set = set()
         self.genesis_id: Optional[str] = None
         self._counter = 0
+        # per-client latest-transaction index: ``latest_of`` sits on the
+        # coordinator's hot path (once per round per client plus the final
+        # sweep), so an O(ledger) scan per call turns quadratic — keep it
+        # O(1) by updating on append
+        self._latest: Dict[int, Transaction] = {}
 
     # -- construction -------------------------------------------------------
 
@@ -133,6 +138,11 @@ class DAGLedger:
             self.children[p].append(tx_id)
             self._tips.discard(p)
         self._tips.add(tx_id)
+        # >= keeps the old full-scan tie-break: among equal timestamps the
+        # latest-inserted transaction wins
+        cur = self._latest.get(metadata.client_id)
+        if cur is None or timestamp >= cur.timestamp:
+            self._latest[metadata.client_id] = tx
         return tx
 
     # -- queries ------------------------------------------------------------
@@ -142,11 +152,9 @@ class DAGLedger:
         return sorted(self._tips)
 
     def latest_of(self, client_id: int) -> Optional[str]:
-        best, best_t = None, -1.0
-        for tx in self.nodes.values():
-            if tx.metadata.client_id == client_id and tx.timestamp >= best_t:
-                best, best_t = tx.tx_id, tx.timestamp
-        return best
+        """O(1): served from the per-client index maintained in _make_tx."""
+        tx = self._latest.get(client_id)
+        return tx.tx_id if tx is not None else None
 
     def reachable_tips(self, start_node: Optional[str]
                        ) -> Tuple[List[str], List[str]]:

@@ -67,9 +67,20 @@ class EventLoop:
         self._heap: List[Tuple[float, int, Callable[[], None]]] = []
         self._seq = 0
         self.now = 0.0
+        # negative-delay schedules clamped to "now" (observable: the cohort
+        # path legitimately produces these when a round completes before its
+        # window flushes — the publish lands at the flush time)
+        self.clamped = 0
 
     def schedule(self, delay: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (self.now + max(delay, 0.0), self._seq, fn))
+        if delay < 0.0:
+            self.clamped += 1
+            delay = 0.0
+        t = self.now + delay
+        # the clamp must hold: simulated time never runs backwards, and a
+        # NaN delay would silently corrupt the heap order
+        assert t >= self.now, f"schedule produced past/NaN time {t!r}"
+        heapq.heappush(self._heap, (t, self._seq, fn))
         self._seq += 1
 
     def run(self, until: Optional[float] = None,

@@ -149,8 +149,36 @@ def select_tips(ledger: DAGLedger,
 
     # -- top-up if still short (tiny DAGs) ----------------------------------
     if len(chosen) < n:
-        remaining = [t for t in tips if t not in {c.tx_id for c in chosen}]
-        for t in sorted(remaining, key=lambda t: -fresh(t))[: n - len(chosen)]:
-            chosen.append(TipScore(t, t in reachable, fresh(t),
-                                   evaluate_fn(t), fresh(t)))
+        chosen.extend(top_up_tips(chosen, tips, reachable, fresh,
+                                  evaluate_fn, evaluate_batch, n))
     return chosen
+
+
+def top_up_tips(chosen: Sequence[TipScore], tips: Sequence[str],
+                reachable: Sequence[str],
+                fresh: Callable[[str], float],
+                evaluate_fn: Callable[[str], float],
+                evaluate_batch: Optional[Callable[[Sequence[str]], None]],
+                n: int) -> List[TipScore]:
+    """Fill a short selection from the not-yet-chosen tips.
+
+    Ranks by the paper's ``freshness * accuracy`` score, exactly like the
+    reachable side — ranking by freshness alone let stale-but-accurate
+    garbage outrank good models.  The remainder set is batch-validated
+    FIRST (when the caller has a vectorized backend), so the per-tip
+    ``evaluate_fn`` serves from the warmed cache instead of paying one
+    sequential dispatch per top-up tip, and freshness is computed once per
+    candidate, not three times.
+    """
+    have = {c.tx_id for c in chosen}
+    remaining = [t for t in tips if t not in have]
+    if evaluate_batch is not None and remaining:
+        evaluate_batch(remaining)
+    reach_set = set(reachable)
+    scored = []
+    for t in remaining:
+        f = fresh(t)                         # once per candidate
+        acc = evaluate_fn(t)
+        scored.append(TipScore(t, t in reach_set, f, acc, f * acc))
+    scored.sort(key=lambda s: -s.score)
+    return scored[: n - len(chosen)]

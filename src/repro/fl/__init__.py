@@ -3,8 +3,14 @@ from repro.fl.baselines import (ALGORITHMS, FLConfig, run_centralized,
                                 run_csafl, run_dagafl, run_dagfl,
                                 run_fedasync, run_fedat, run_fedavg,
                                 run_fedhisyn, run_independent, run_scalesfl)
+from repro.fl.cohort import (CNNCohortPrograms, CohortBackend, CohortPrograms,
+                             LMCohortPrograms, build_cohort_engine,
+                             register_cohort_programs, resolve_cohort_mesh)
 
 __all__ = ["CNNBackend", "LMBackend", "ALGORITHMS", "FLConfig",
            "run_centralized", "run_independent", "run_fedavg", "run_fedasync",
            "run_fedat", "run_csafl", "run_fedhisyn", "run_scalesfl",
-           "run_dagfl", "run_dagafl"]
+           "run_dagfl", "run_dagafl",
+           "CohortBackend", "CohortPrograms", "CNNCohortPrograms",
+           "LMCohortPrograms", "build_cohort_engine",
+           "register_cohort_programs", "resolve_cohort_mesh"]

@@ -75,18 +75,13 @@ class _Harness:
         self.key = jax.random.PRNGKey(cfg.seed)
         self.cohort = None
         if cfg.cohort_size > 1:
-            from repro.core.coordinator import resolve_cohort_mesh
-            from repro.fl.cohort import CohortBackend
-            if CohortBackend.supports(backend):
-                self.cohort = CohortBackend(backend,
-                                            capacity=cfg.cohort_size,
-                                            mesh=resolve_cohort_mesh(
-                                                cfg.mesh, cfg.cohort_size,
-                                                cfg.clients_axis),
-                                            clients_axis=cfg.clients_axis)
-                self.cohort.register_shards(
-                    [client_data[c]["train"] for c in range(cfg.n_clients)],
-                    epochs=cfg.local_epochs)
+            # backend-agnostic construction via the cohort program registry
+            from repro.fl.cohort import build_cohort_engine
+            self.cohort = build_cohort_engine(
+                backend,
+                [client_data[c]["train"] for c in range(cfg.n_clients)],
+                cohort_size=cfg.cohort_size, mesh=cfg.mesh,
+                clients_axis=cfg.clients_axis, epochs=cfg.local_epochs)
         self._val_sets = [client_data[c]["val"]
                           for c in range(cfg.n_clients)]
 

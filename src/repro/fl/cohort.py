@@ -5,18 +5,33 @@ simulated time; this module decides *how* the container executes the work.
 Instead of K serial ``train_local`` / ``evaluate`` / ``signature`` calls, a
 :class:`CohortBackend` stacks the K clients' parameter pytrees along a
 leading client axis (``tree_stack``) and runs local training, evaluation and
-signature extraction as single batched jitted programs.  Training — the
-FLOP-heavy path — is ``jax.vmap``-batched with the convolutions rewritten
-as im2col GEMMs (see ``_conv_as_matmul``); evaluation and signatures are
-FLOP-light, so they are ``lax.map``-fused into one dispatch while keeping
-the dense-conv lowering per client.
+signature extraction as single batched jitted programs.
+
+The batched programs themselves are supplied per backend family by a
+*cohort programs* suite (:class:`CohortPrograms`):
+
+  * :class:`CNNCohortPrograms` — the paper-faithful VGG path.  Training is
+    ``jax.vmap``-batched with the convolutions rewritten as im2col GEMMs
+    (see ``_conv_as_matmul``); evaluation and signatures are FLOP-light, so
+    they are ``lax.map``-fused into one dispatch while keeping the
+    dense-conv lowering per client.
+  * :class:`LMCohortPrograms` — the transformer (``LMBackend``) path.
+    Training vmaps the stacked K-client param pytrees over the same masked
+    scan (token batches pre-sampled per client exactly like the sequential
+    RNG stream); evaluation and Eq. 3 signatures (threshold-zero fractions
+    of the designated final-norm activations, per sample so padding masks
+    out) run ``lax.map``-fused like the CNN ones.
+
+``register_cohort_programs`` extends the registry; ``CohortBackend.supports``
+answers for any backend instance, and callers fall back to the sequential
+path for unregistered backends.
 
 Ragged shards are handled by padding + masking:
 
-  * training: every client's (epochs x n_batches) step sequence is padded to
-    a common length ``T``; masked steps compute a gradient on zero-padding
-    but the pytree select keeps the pre-step params/optimizer state, so
-    padding NEVER leaks into the trained weights.
+  * training: every client's step sequence is padded to a common length
+    ``T``; masked steps compute a gradient on zero-padding but the pytree
+    select keeps the pre-step params/optimizer state, so padding NEVER
+    leaks into the trained weights.
   * evaluation/signature: sample axes are padded to a common length and the
     accuracy / Eq. 3 zero-fraction means are masked, so padded samples carry
     zero weight.
@@ -25,7 +40,9 @@ Shape discipline (CPU/TPU friendly): the cohort axis is padded to powers of
 two capped at ``capacity``, the training step axis to a monotone registered
 maximum, and eval/signature sample axes to per-call targets quantized by
 ``eval_pad_quantum`` — so steady-state dispatches hit a bounded set of
-compiled programs instead of retracing.
+compiled programs instead of retracing.  Eval/signature data buffers are
+cached per dataset with an LRU bound (``eval_cache_entries``) so a
+long-running simulator never pins an unbounded set of shards.
 
 SPMD over a device mesh: passing ``mesh`` (any ``jax.sharding.Mesh`` whose
 ``clients_axis`` axis has more than one device — see
@@ -41,16 +58,13 @@ evenly; masking keeps the padding out of every result exactly as on one
 device.  ``mesh=None`` (or a 1-device mesh) is bit-for-bit today's
 single-device path.  Extra mesh axes (``data``/``model`` from
 ``repro.launch.mesh``) compose: these programs only consume ``clients_axis``
-and replicate over the rest.
-
-Currently implemented for :class:`repro.fl.backend.CNNBackend` (the
-paper-faithful VGG path used by the coordinator, baselines and benchmarks);
-``CohortBackend.supports`` lets callers fall back to the sequential path for
-other backends.
+and replicate over the rest.  This works identically for both program
+suites — the mesh plumbing never inspects what the programs compute.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Type
 
 import jax
 import jax.numpy as jnp
@@ -58,8 +72,7 @@ import numpy as np
 
 from repro.core.aggregate import (next_pow2, pad_leading, round_up_multiple,
                                   tree_stack, tree_unstack)
-from repro.data.synthetic import Dataset
-from repro.fl.backend import CNNBackend
+from repro.fl.backend import CNNBackend, LMBackend
 from repro.optim.optimizers import apply_updates
 
 
@@ -99,176 +112,130 @@ def _max_pool_2x2(x):
     return jnp.max(x, axis=(2, 4))
 
 
-class CohortBackend:
-    """Batched train/eval/signature over a stacked K-client pytree.
+# ---------------------------------------------------------------------------
+# per-backend cohort program suites
+# ---------------------------------------------------------------------------
 
-    Wraps a per-client backend; ``capacity`` fixes the cohort axis so every
-    flush compiles to the same program (short cohorts are padded with a
-    repeat of the last client and fully masked out).
+
+class CohortPrograms:
+    """Batched train/eval/signature program suite for one backend family.
+
+    :class:`CohortBackend` supplies the *execution* discipline — stacking,
+    padding, masking, vmap/lax.map fusion, jit, mesh ``shard_map`` — and
+    delegates everything backend-specific to this interface.  A suite owns:
+
+    traced (called inside the engine's jitted programs):
+      * ``loss(params, x, y)``            scalar training loss on one batch
+      * ``masked_eval(params, xs, ys, ms)``  masked accuracy on one shard
+      * ``eval_shared(params, x, y, mask)``  ONE model on K stacked shards
+      * ``sample_signature(params, xs)``  per-sample Eq. 3 signature rows,
+        so the engine can take a padding-masked mean
+
+    host-side (batch assembly, matching the sequential RNG streams exactly):
+      * ``train_steps(ds, epochs)``       step count one client will run
+      * ``client_batches(ds, seed, epochs)``  (xb (T, ...), yb (T, ...))
+      * ``eval_single(ds, limit, kind)``  (x (n, ...), y, n) for one shard;
+        ``kind`` is "eval" or "sig" (suites whose two paths sample
+        differently — the LM backend — return different tokens per kind)
+      * ``summarize_losses(losses, steps, epochs)``  the sequential path's
+        per-client loss contract
+      * ``evaluate_one(params, ds, limit)``  sequential single-model eval
+        (the M=1 fast path of ``evaluate_many``)
     """
 
-    def __init__(self, backend: CNNBackend, capacity: Optional[int] = None,
-                 eval_pad_quantum: int = 64, mesh=None,
-                 clients_axis: str = "clients"):
-        if not self.supports(backend):
-            raise TypeError(
-                f"CohortBackend supports CNNBackend, got {type(backend)}")
+    backend_cls: Type = None
+    # lax.map (dispatch fusion, per-iteration lowering kept) vs jax.vmap
+    # (arithmetic batching) for the eval/signature programs: convs vmap onto
+    # XLA:CPU's slow grouped path, transformers vmap onto batched GEMMs
+    vmap_eval: bool = False
+    # below this many candidate models, evaluate_many runs the sequential
+    # per-model program: the pow2 model-axis padding + tree_stack overhead
+    # outweigh fusion for tiny sweeps (suite-specific dispatch economics)
+    eval_many_min_batch: int = 1
+
+    def __init__(self, backend):
         self.backend = backend
-        self.capacity = capacity
-        # padding quantum for eval/signature sample axes: shards pad to the
-        # next power of two below it and to multiples of it above, keeping
-        # the compiled-program count bounded with ragged validation shards
-        self.eval_pad_quantum = eval_pad_quantum
         self.cfg = backend.cfg
-        self.opt = backend.opt
-        self._pad_T = 0            # monotone step-axis pad target
-        self._eval_data_cache: Dict = {}
-        # a 1-device (or absent) clients axis degrades to the exact
-        # single-device programs — same jit cache, same numerics
-        self.clients_axis = clients_axis
-        self.mesh = None
-        if mesh is not None:
-            if clients_axis not in mesh.shape:
-                raise ValueError(
-                    f"mesh axes {tuple(mesh.axis_names)} carry no "
-                    f"{clients_axis!r} axis")
-            if int(dict(mesh.shape)[clients_axis]) > 1:
-                self.mesh = mesh
-        self._n_shards = (int(dict(self.mesh.shape)[clients_axis])
-                          if self.mesh is not None else 1)
-        if self.mesh is None:
-            self._train_jit = jax.jit(self._train_impl)
-            self._eval_jit = jax.jit(self._eval_impl)
-            self._eval_shared_jit = jax.jit(self._eval_shared_impl)
-            self._eval_many_jit = jax.jit(self._eval_many_impl)
-            self._sig_jit = jax.jit(self._sig_impl)
-        else:
-            from jax.experimental.shard_map import shard_map
-            from jax.sharding import PartitionSpec
-            c, r = PartitionSpec(clients_axis), PartitionSpec()
 
-            def spmd(fn, in_specs, out_specs):
-                """Client-axis SPMD: each device runs ``fn`` on its local
-                client group; there are no collectives inside — aggregation
-                happens in ``repro.core.aggregate``'s psum programs."""
-                return jax.jit(shard_map(fn, mesh=self.mesh,
-                                         in_specs=in_specs,
-                                         out_specs=out_specs))
+    @property
+    def default_epochs(self) -> int:
+        raise NotImplementedError
 
-            self._train_jit = spmd(self._train_impl, (c, c, c, c), (c, c))
-            self._eval_jit = spmd(self._eval_impl, (c, c, c, c), c)
-            # shared model replicated, K val shards sharded over clients
-            self._eval_shared_jit = spmd(self._eval_shared_impl,
-                                         (r, c, c, c), c)
-            # M candidate models sharded, the one val shard replicated
-            self._eval_many_jit = spmd(self._eval_many_impl,
-                                       (c, r, r, r), c)
-            self._sig_jit = spmd(self._sig_impl, (c, c, c), c)
+    # traced
+    def loss(self, params, x, y):
+        raise NotImplementedError
 
-    @staticmethod
-    def supports(backend) -> bool:
-        return isinstance(backend, CNNBackend)
+    def masked_eval(self, params, xs, ys, ms):
+        raise NotImplementedError
 
-    def register_shards(self, train_shards: Sequence[Dataset],
-                        epochs: Optional[int] = None) -> None:
-        """Pre-size the training step-axis pad target from the client
-        shards and the epochs the caller will actually train with, so the
-        very first flush already compiles the steady-state program.  The
-        target must match the real step count: it is monotone, so an
-        over-estimate (e.g. the backend's default epochs when the
-        coordinator trains fewer) would permanently pad — and compute —
-        every cohort scan to the inflated length.  (Eval pad targets are
-        per-call: a global target would let one large shard — e.g. the
-        final global-test sweep — permanently inflate every small-val-set
-        dispatch.)"""
-        b = self.backend
-        epochs = epochs or b.local_epochs
-        for ds in train_shards:
-            n_batches = max(len(ds) // b.batch_size, 1)
-            self._pad_T = max(self._pad_T, epochs * n_batches)
+    def eval_shared(self, params, x, y, mask):
+        raise NotImplementedError
 
-    def _round_chunk(self, n: int) -> int:
-        """Pad target for a sample axis: next power of two below the
-        quantum (tiny val shards don't pay quantum-multiple waste), quantum
-        multiples above it (bounded compile count either way)."""
-        c = self.eval_pad_quantum
-        if n >= c:
-            return round_up_multiple(n, c)
-        return next_pow2(n)
+    def sample_signature(self, params, xs):
+        raise NotImplementedError
 
-    # -- jitted programs ----------------------------------------------------
+    # host-side
+    def train_steps(self, ds, epochs: int) -> int:
+        raise NotImplementedError
 
-    def _forward(self, params, x, want_signature: bool = False):
-        """``cnn_forward`` in matmul form (see :func:`_conv_as_matmul`);
-        the signature, when requested, is per-sample (B, channels) so the
-        caller can take a padding-masked mean."""
-        cfg = self.cfg
-        sig = None
-        conv_idx = 0
+    def client_batches(self, ds, seed: int, epochs: int):
+        raise NotImplementedError
+
+    def eval_single(self, ds, limit: int, kind: str):
+        raise NotImplementedError
+
+    def summarize_losses(self, losses: np.ndarray, steps: Sequence[int],
+                         epochs: int) -> List[float]:
+        raise NotImplementedError
+
+    def evaluate_one(self, params, ds, limit: int) -> float:
+        raise NotImplementedError
+
+
+class CNNCohortPrograms(CohortPrograms):
+    """VGG-family programs (the paper's experimental setup).
+
+    Training runs the matmul-form forward (`_conv_as_matmul`) so the vmapped
+    cohort step lowers to batched GEMMs; evaluation and signatures keep the
+    dense-conv lowering per client and rely on ``lax.map`` dispatch fusion
+    (see the engine's ``_eval_impl`` note).
+    """
+
+    backend_cls = CNNBackend
+
+    @property
+    def default_epochs(self) -> int:
+        return self.backend.local_epochs
+
+    def _forward(self, params, x):
+        """``cnn_forward`` in matmul form (see :func:`_conv_as_matmul`)."""
         for stack_params in params["convs"]:
             for p in stack_params:
                 x = jax.nn.relu(_conv_as_matmul(x, p["w"]) + p["b"])
-                if want_signature and conv_idx == cfg.signature_layer:
-                    sig = jnp.mean((x == 0.0).astype(jnp.float32),
-                                   axis=(1, 2))                  # (B, ch)
-                conv_idx += 1
             x = _max_pool_2x2(x)
         x = x.reshape(x.shape[0], -1)
         for p in params["fcs"][:-1]:
             x = jax.nn.relu(x @ p["w"] + p["b"])
         p = params["fcs"][-1]
-        return x @ p["w"] + p["b"], sig
+        return x @ p["w"] + p["b"]
 
-    def _loss(self, params, x, y):
-        logits, _ = self._forward(params, x)
+    def loss(self, params, x, y):
+        logits = self._forward(params, x)
         logz = jax.scipy.special.logsumexp(logits, axis=-1)
         ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
         return jnp.mean(logz - ll)
 
-    def _train_impl(self, stacked_params, xb, yb, mask):
-        """xb (K, T, B, H, W, C); yb (K, T, B); mask (K, T) — one vmapped
-        scan: the whole cohort advances one SGD step per scan tick."""
-
-        def one_client(params, xs, ys, ms):
-            opt_state = self.opt.init(params)
-
-            def step(carry, batch):
-                params, opt_state = carry
-                x, y, m = batch
-                loss, grads = jax.value_and_grad(self._loss)(params, x, y)
-                updates, new_opt = self.opt.update(grads, opt_state, params)
-                new_params = apply_updates(params, updates)
-                params = _tree_select(m, new_params, params)
-                opt_state = _tree_select(m, new_opt, opt_state)
-                return (params, opt_state), jnp.where(m, loss, 0.0)
-
-            (params, _), losses = jax.lax.scan(
-                step, (params, opt_state), (xs, ys, ms))
-            return params, losses
-
-        return jax.vmap(one_client)(stacked_params, xb, yb, mask)
-
-    def _masked_correct(self, params, xs, ys, ms):
-        """Masked #correct on one shard, conv-form forward (see note in
-        ``_eval_impl`` on why eval does NOT use the matmul form)."""
+    def masked_eval(self, params, xs, ys, ms):
+        """Masked #correct on one shard, conv-form forward: eval is
+        FLOP-light and per-client weights make a vmapped conv lower to
+        XLA:CPU's slow grouped path, so dense-conv + dispatch fusion wins
+        over arithmetic batching here."""
         from repro.models import cnn as cnn_mod
         logits, _ = cnn_mod.cnn_forward(params, xs, self.cfg)
         correct = (jnp.argmax(logits, -1) == ys).astype(jnp.float32)
         return jnp.sum(correct * ms) / jnp.maximum(jnp.sum(ms), 1.0)
 
-    def _eval_impl(self, stacked_params, x, y, mask):
-        """K models on K padded shards: x (K, N, ...), mask (K, N).
-
-        Evaluation is FLOP-light and per-client weights make a vmapped conv
-        lower to XLA:CPU's slow grouped path, so the win here is dispatch
-        fusion, not arithmetic batching: ``lax.map`` runs the K conv-form
-        forwards inside ONE compiled program (one dispatch, one sync) while
-        each iteration keeps the fast dense-conv lowering."""
-        return jax.lax.map(
-            lambda args: self._masked_correct(*args),
-            (stacked_params, x, y, mask))
-
-    def _eval_shared_impl(self, params, x, y, mask):
+    def eval_shared(self, params, x, y, mask):
         """ONE model on K padded shards (publisher's convergence monitor).
         The params carry no cohort axis, so the K shards simply fold into
         the batch dimension of the conv-form forward — true batching."""
@@ -281,14 +248,7 @@ class CohortBackend:
         return jnp.sum(correct, axis=1) / jnp.maximum(jnp.sum(mask, axis=1),
                                                       1.0)
 
-    def _eval_many_impl(self, stacked_params, x, y, mask):
-        """M models on ONE padded shard (batched tip validation): fused
-        into one program via ``lax.map`` for the same reason as
-        ``_eval_impl``."""
-        return jax.lax.map(
-            lambda p: self._masked_correct(p, x, y, mask), stacked_params)
-
-    def _sig_forward(self, params, x):
+    def sample_signature(self, params, x):
         """Per-sample Eq. 3 zero fractions, conv-form, EARLY EXIT: only the
         convs up to ``signature_layer`` run — the classifier head and later
         stacks contribute nothing to the signature."""
@@ -308,36 +268,380 @@ class CohortBackend:
         raise ValueError(f"signature_layer {cfg.signature_layer} out of "
                          f"range for {cfg.name}")
 
-    def _sig_impl(self, stacked_params, x, mask):
-        """Masked Eq. 3-4 signatures: per-sample zero fractions, then a
-        masked mean so padding samples never enter the signature."""
+    def train_steps(self, ds, epochs: int) -> int:
+        b = self.backend
+        return epochs * max(len(ds) // b.batch_size, 1)
 
-        def one(args):
-            params, xs, ms = args
-            zf = self._sig_forward(params, xs)
+    def client_batches(self, ds, seed: int, epochs: int):
+        """Replicates ``CNNBackend.train_local``'s exact per-client batch
+        sampling (same np RNG stream per seed)."""
+        b = self.backend
+        rng = np.random.default_rng(seed)
+        xs, ys = [], []
+        for _ in range(epochs):
+            xb, yb = b._batches(ds, rng)
+            xs.append(xb)
+            ys.append(yb)
+        return jnp.concatenate(xs), jnp.concatenate(ys)
+
+    def eval_single(self, ds, limit: int, kind: str):
+        n = min(len(ds), limit)
+        return jnp.asarray(ds.x[:n]), jnp.asarray(ds.y[:n]), n
+
+    def summarize_losses(self, losses, steps, epochs) -> List[float]:
+        """Sequential contract: mean loss over the client's LAST epoch."""
+        per_epoch = [s // epochs for s in steps]
+        return [float(np.mean(losses[i, s - per_epoch[i]:s]))
+                for i, s in enumerate(steps)]
+
+    def evaluate_one(self, params, ds, limit: int) -> float:
+        return self.backend.evaluate(params, ds, limit)
+
+
+class LMCohortPrograms(CohortPrograms):
+    """Transformer (``LMBackend``) programs: the framework-scale path.
+
+    Training vmaps the per-client SGD scan over the stacked param pytrees —
+    the transformer step is already GEMM-shaped, so unlike the CNN path no
+    lowering rewrite is needed; the win is one fused dispatch (and one
+    shard_map program under a mesh) instead of K serial jitted calls.  Token
+    batches are pre-sampled on the host with the SAME np RNG stream as
+    ``LMBackend.train_local``/``evaluate``/``signature``, so cohort and
+    sequential runs see identical data.  Signatures are the Eq. 3
+    threshold-zero fractions of the designated signature layer (the
+    final-norm hidden state, matching ``Runtime.want_signature``), computed
+    per sample so the engine's padding mask keeps padded rows out.
+    """
+
+    backend_cls = LMBackend
+    vmap_eval = True            # transformer forwards vmap onto batched GEMMs
+    eval_many_min_batch = 3
+
+    def __init__(self, backend):
+        super().__init__(backend)
+        import dataclasses
+        # eval/signature forwards don't need the fused aux signature (we
+        # compute per-sample rows ourselves for maskability)
+        self.runtime = dataclasses.replace(backend.runtime,
+                                           want_signature=False)
+        # the batched train step drops remat: rematerialization trades
+        # compute for activation memory, the right call for production-size
+        # models but pure overhead for FL-size ones (~1.3x extra forward
+        # FLOPs); gradients are bit-comparable either way, which the
+        # cohort-vs-sequential property tests pin down
+        self.train_runtime = dataclasses.replace(self.runtime, remat=False)
+
+    @property
+    def default_epochs(self) -> int:
+        return self.backend.local_steps
+
+    def loss(self, params, x, y):
+        """x (B, S+1) token rows; y (B, S) = x[:, 1:] (next-token labels)."""
+        from repro.models import transformer as tfm
+        batch = {"tokens": x[:, :-1], "labels": y}
+        return tfm.loss_fn(params, batch, self.cfg, self.train_runtime)[0]
+
+    def _row_correct(self, params, xs, ys):
+        """(N, S) correctness grid for a padded token shard."""
+        from repro.models import transformer as tfm
+        logits, _, _ = tfm.forward(params, {"tokens": xs[:, :-1]}, self.cfg,
+                                   self.runtime, mode="prefill")
+        return (jnp.argmax(logits, -1) == ys).astype(jnp.float32)
+
+    def masked_eval(self, params, xs, ys, ms):
+        """Per-row next-token accuracy, padding-masked over rows.  Rows all
+        carry ``seq_len`` real positions, so the masked mean of row means
+        equals the sequential path's grand mean."""
+        per_row = jnp.mean(self._row_correct(params, xs, ys), axis=-1)
+        return jnp.sum(per_row * ms) / jnp.maximum(jnp.sum(ms), 1.0)
+
+    def eval_shared(self, params, x, y, mask):
+        """ONE model on K stacked token shards: fold K into the batch dim —
+        true batching, same as the CNN suite."""
+        k, n = x.shape[0], x.shape[1]
+        flat = x.reshape((k * n,) + x.shape[2:])
+        correct = self._row_correct(params, flat, y.reshape((k * n,) +
+                                                            y.shape[2:]))
+        per_row = jnp.mean(correct, axis=-1).reshape(k, n) * mask
+        return jnp.sum(per_row, axis=1) / jnp.maximum(jnp.sum(mask, axis=1),
+                                                      1.0)
+
+    def sample_signature(self, params, xs):
+        """(N, sig_dims) Eq. 3 rows from the designated signature layer."""
+        from repro.models import transformer as tfm
+        h, _, _ = tfm.forward_hidden(params, {"tokens": xs[:, :-1]}, self.cfg,
+                                     self.runtime, mode="prefill")
+        return tfm.per_sample_signature(h, self.backend.runtime)
+
+    def train_steps(self, ds, epochs: int) -> int:
+        # one step per "epoch" regardless of stream length (LMBackend
+        # samples `epochs` fixed-size token batches)
+        return epochs
+
+    def client_batches(self, ds, seed: int, epochs: int):
+        """Same np RNG stream as ``LMBackend.train_local``: one
+        ``_sample`` call drawing (epochs, B, S+1) token windows."""
+        toks = self.backend._sample(ds, np.random.default_rng(seed), epochs)
+        return toks, toks[:, :, 1:]
+
+    # sequential LMBackend.evaluate/signature fix their sampling seeds
+    _EVAL_SEEDS = {"eval": 1, "sig": 2}
+
+    def eval_single(self, ds, limit: int, kind: str):
+        toks = self.backend._sample(ds, np.random.default_rng(
+            self._EVAL_SEEDS[kind]), 1)[0]
+        return toks, toks[:, 1:], int(toks.shape[0])
+
+    def summarize_losses(self, losses, steps, epochs) -> List[float]:
+        """Sequential contract: mean loss over ALL the client's steps."""
+        return [float(np.mean(losses[i, :s])) for i, s in enumerate(steps)]
+
+    def evaluate_one(self, params, ds, limit: int) -> float:
+        return self.backend.evaluate(params, ds)
+
+
+_PROGRAM_REGISTRY: List[Type[CohortPrograms]] = []
+
+
+def register_cohort_programs(programs_cls: Type[CohortPrograms]) -> None:
+    """Register a program suite; later registrations win on overlap."""
+    if not isinstance(getattr(programs_cls, "backend_cls", None), type):
+        raise TypeError(
+            f"{programs_cls.__name__}.backend_cls must name the backend "
+            "class the suite batches for")
+    _PROGRAM_REGISTRY.insert(0, programs_cls)
+
+
+register_cohort_programs(CNNCohortPrograms)
+register_cohort_programs(LMCohortPrograms)
+
+
+def _programs_for(backend) -> Optional[Type[CohortPrograms]]:
+    for cls in _PROGRAM_REGISTRY:
+        if isinstance(backend, cls.backend_cls):
+            return cls
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class CohortBackend:
+    """Batched train/eval/signature over a stacked K-client pytree.
+
+    Wraps a per-client backend; ``capacity`` fixes the cohort axis so every
+    flush compiles to the same program (short cohorts are padded with a
+    repeat of the last client and fully masked out).  The backend-specific
+    programs come from the :class:`CohortPrograms` registry.
+    """
+
+    def __init__(self, backend, capacity: Optional[int] = None,
+                 eval_pad_quantum: int = 64, mesh=None,
+                 clients_axis: str = "clients",
+                 eval_cache_entries: int = 64):
+        programs_cls = _programs_for(backend)
+        if programs_cls is None:
+            raise TypeError(
+                f"no CohortPrograms registered for {type(backend).__name__}; "
+                f"known: {[c.backend_cls.__name__ for c in _PROGRAM_REGISTRY]}")
+        self.programs = programs_cls(backend)
+        self.backend = backend
+        self.capacity = capacity
+        # padding quantum for eval/signature sample axes: shards pad to the
+        # next power of two below it and to multiples of it above, keeping
+        # the compiled-program count bounded with ragged validation shards
+        self.eval_pad_quantum = eval_pad_quantum
+        self.cfg = backend.cfg
+        self.opt = backend.opt
+        self._pad_T = 0            # monotone step-axis pad target
+        # LRU over padded eval/signature buffers: a long-running simulator
+        # sweeps many shards; the cap bounds pinned device memory
+        self._eval_data_cache: "OrderedDict" = OrderedDict()
+        self.eval_cache_entries = max(int(eval_cache_entries), 1)
+        # a 1-device (or absent) clients axis degrades to the exact
+        # single-device programs — same jit cache, same numerics
+        self.clients_axis = clients_axis
+        self.mesh = None
+        if mesh is not None:
+            if clients_axis not in mesh.shape:
+                raise ValueError(
+                    f"mesh axes {tuple(mesh.axis_names)} carry no "
+                    f"{clients_axis!r} axis")
+            if int(dict(mesh.shape)[clients_axis]) > 1:
+                self.mesh = mesh
+        self._n_shards = (int(dict(self.mesh.shape)[clients_axis])
+                          if self.mesh is not None else 1)
+        if self.mesh is None:
+            self._train_jit = jax.jit(self._train_impl)
+            self._train_uniform_jit = jax.jit(self._train_uniform_impl)
+            self._eval_jit = jax.jit(self._eval_impl)
+            self._eval_shared_jit = jax.jit(self._eval_shared_impl)
+            self._eval_many_jit = jax.jit(self._eval_many_impl)
+            self._sig_jit = jax.jit(self._sig_impl)
+        else:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec
+            c, r = PartitionSpec(clients_axis), PartitionSpec()
+
+            def spmd(fn, in_specs, out_specs):
+                """Client-axis SPMD: each device runs ``fn`` on its local
+                client group; there are no collectives inside — aggregation
+                happens in ``repro.core.aggregate``'s psum programs."""
+                return jax.jit(shard_map(fn, mesh=self.mesh,
+                                         in_specs=in_specs,
+                                         out_specs=out_specs))
+
+            self._train_jit = spmd(self._train_impl, (c, c, c, c), (c, c))
+            self._train_uniform_jit = spmd(self._train_uniform_impl,
+                                           (c, c, c), (c, c))
+            self._eval_jit = spmd(self._eval_impl, (c, c, c, c), c)
+            # shared model replicated, K val shards sharded over clients
+            self._eval_shared_jit = spmd(self._eval_shared_impl,
+                                         (r, c, c, c), c)
+            # M candidate models sharded, the one val shard replicated
+            self._eval_many_jit = spmd(self._eval_many_impl,
+                                       (c, r, r, r), c)
+            self._sig_jit = spmd(self._sig_impl, (c, c, c), c)
+
+    @staticmethod
+    def supports(backend) -> bool:
+        return _programs_for(backend) is not None
+
+    def register_shards(self, train_shards: Sequence,
+                        epochs: Optional[int] = None) -> None:
+        """Pre-size the training step-axis pad target from the client
+        shards and the epochs the caller will actually train with, so the
+        very first flush already compiles the steady-state program.  The
+        target must match the real step count: it is monotone, so an
+        over-estimate (e.g. the backend's default epochs when the
+        coordinator trains fewer) would permanently pad — and compute —
+        every cohort scan to the inflated length.  (Eval pad targets are
+        per-call: a global target would let one large shard — e.g. the
+        final global-test sweep — permanently inflate every small-val-set
+        dispatch.)"""
+        epochs = epochs or self.programs.default_epochs
+        for ds in train_shards:
+            self._pad_T = max(self._pad_T, self.programs.train_steps(ds,
+                                                                     epochs))
+
+    def _round_chunk(self, n: int) -> int:
+        """Pad target for a sample axis: next power of two below the
+        quantum (tiny val shards don't pay quantum-multiple waste), quantum
+        multiples above it (bounded compile count either way)."""
+        c = self.eval_pad_quantum
+        if n >= c:
+            return round_up_multiple(n, c)
+        return next_pow2(n)
+
+    # -- jitted programs ----------------------------------------------------
+
+    def _train_impl(self, stacked_params, xb, yb, mask):
+        """xb (K, T, ...); yb (K, T, ...); mask (K, T) — one vmapped scan:
+        the whole cohort advances one SGD step per scan tick."""
+
+        def one_client(params, xs, ys, ms):
+            opt_state = self.opt.init(params)
+
+            def step(carry, batch):
+                params, opt_state = carry
+                x, y, m = batch
+                loss, grads = jax.value_and_grad(self.programs.loss)(
+                    params, x, y)
+                updates, new_opt = self.opt.update(grads, opt_state, params)
+                new_params = apply_updates(params, updates)
+                params = _tree_select(m, new_params, params)
+                opt_state = _tree_select(m, new_opt, opt_state)
+                return (params, opt_state), jnp.where(m, loss, 0.0)
+
+            (params, _), losses = jax.lax.scan(
+                step, (params, opt_state), (xs, ys, ms))
+            return params, losses
+
+        return jax.vmap(one_client)(stacked_params, xb, yb, mask)
+
+    def _train_uniform_impl(self, stacked_params, xb, yb):
+        """Mask-free variant for cohorts whose clients all run the SAME
+        number of steps (every LM window; CNN windows with equal shard
+        geometry): no padded scan ticks exist, so the per-leaf select ops
+        — two pytree-wide ``where`` sweeps per step — drop out entirely.
+        Cohort-axis padding still composes: padded repeat clients just
+        train redundantly and their rows are discarded by the caller."""
+
+        def one_client(params, xs, ys):
+            opt_state = self.opt.init(params)
+
+            def step(carry, batch):
+                params, opt_state = carry
+                x, y = batch
+                loss, grads = jax.value_and_grad(self.programs.loss)(
+                    params, x, y)
+                updates, opt_state = self.opt.update(grads, opt_state, params)
+                return (apply_updates(params, updates), opt_state), loss
+
+            (params, _), losses = jax.lax.scan(
+                step, (params, opt_state), (xs, ys))
+            return params, losses
+
+        return jax.vmap(one_client)(stacked_params, xb, yb)
+
+    def _eval_impl(self, stacked_params, x, y, mask):
+        """K models on K padded shards: x (K, N, ...), mask (K, N).
+
+        Fusion style is the program suite's call (``vmap_eval``):
+        ``lax.map`` runs the K per-client forwards inside ONE compiled
+        program (one dispatch, one sync) keeping each iteration's preferred
+        lowering — right for convs, whose vmap form lowers to XLA:CPU's
+        slow grouped path; ``jax.vmap`` batches the arithmetic — right for
+        transformers, whose vmap form is batched GEMMs."""
+        if self.programs.vmap_eval:
+            return jax.vmap(self.programs.masked_eval)(
+                stacked_params, x, y, mask)
+        return jax.lax.map(
+            lambda args: self.programs.masked_eval(*args),
+            (stacked_params, x, y, mask))
+
+    def _eval_shared_impl(self, params, x, y, mask):
+        return self.programs.eval_shared(params, x, y, mask)
+
+    def _eval_many_impl(self, stacked_params, x, y, mask):
+        """M models on ONE padded shard (batched tip validation): fused
+        per the suite's ``vmap_eval`` style, same as ``_eval_impl``."""
+        if self.programs.vmap_eval:
+            return jax.vmap(
+                lambda p: self.programs.masked_eval(p, x, y, mask))(
+                stacked_params)
+        return jax.lax.map(
+            lambda p: self.programs.masked_eval(p, x, y, mask),
+            stacked_params)
+
+    def _sig_impl(self, stacked_params, x, mask):
+        """Masked Eq. 3-4 signatures: per-sample zero fractions from the
+        programs suite, then a masked mean so padding samples never enter
+        the signature."""
+
+        def one(params, xs, ms):
+            zf = self.programs.sample_signature(params, xs)
             w = ms[:, None]
             return jnp.sum(zf * w, axis=0) / jnp.maximum(jnp.sum(w), 1.0)
 
-        return jax.lax.map(one, (stacked_params, x, mask))
+        if self.programs.vmap_eval:
+            return jax.vmap(one)(stacked_params, x, mask)
+        return jax.lax.map(lambda args: one(*args), (stacked_params, x, mask))
 
     # -- host-side batch assembly -------------------------------------------
 
-    def _prepare_train(self, datasets: Sequence[Dataset], seeds: Sequence[int],
+    def _prepare_train(self, datasets: Sequence, seeds: Sequence[int],
                        epochs: int):
-        """Replicates ``CNNBackend.train_local``'s exact per-client batch
-        sampling (same np RNG stream per seed), then pads the step axis."""
-        b = self.backend
+        """Per-client batch assembly via the programs suite (same np RNG
+        stream per seed as the sequential path), then pad the step axis."""
         xs_all, ys_all, steps = [], [], []
         for ds, seed in zip(datasets, seeds):
-            rng = np.random.default_rng(seed)
-            xs, ys = [], []
-            for _ in range(epochs):
-                xb, yb = b._batches(ds, rng)
-                xs.append(xb)
-                ys.append(yb)
-            xs_all.append(jnp.concatenate(xs))
-            ys_all.append(jnp.concatenate(ys))
-            steps.append(int(xs_all[-1].shape[0]))
+            xb, yb = self.programs.client_batches(ds, seed, epochs)
+            xs_all.append(xb)
+            ys_all.append(yb)
+            steps.append(int(xb.shape[0]))
 
         self._pad_T = max(self._pad_T, *steps)
         T = self._pad_T
@@ -372,27 +676,39 @@ class CohortBackend:
             [mask, jnp.zeros((reps,) + mask.shape[1:], mask.dtype)])
         return stacked, xb, yb, mask, k
 
-    def _eval_arrays(self, datasets: Sequence[Dataset], limit: int):
-        """Padded (x, y, mask) for a tuple of shards.  Per-DATASET caching:
-        each shard is padded to its own rounded size once; per call we stack
-        the cached singles (topping up to the call-wide max if the batch
-        mixes sizes), so arbitrary cohort compositions — the monitor's full
-        val-set sweep, a window's subset — reuse the same buffers."""
-        ns = [min(len(ds), limit) for ds in datasets]
-        target = max(self._round_chunk(n) for n in ns)
-        singles = []
-        for ds, n in zip(datasets, ns):
-            key = (id(ds), limit)
+    def _eval_arrays(self, datasets: Sequence, limit: int,
+                     kind: str = "eval"):
+        """Padded (x, y, mask) for a tuple of shards.  Per-DATASET LRU
+        caching: each shard is padded to its own rounded size once; per call
+        we stack the cached singles (topping up to the call-wide max if the
+        batch mixes sizes), so arbitrary cohort compositions — the monitor's
+        full val-set sweep, a window's subset — reuse the same buffers while
+        the cache stays bounded at ``eval_cache_entries``."""
+        singles, ns = [], []
+        for ds in datasets:
+            key = (id(ds), limit, kind)
             hit = self._eval_data_cache.get(key)
             if hit is None:
+                x1, y1, n = self.programs.eval_single(ds, limit, kind)
                 own = self._round_chunk(n)
-                x1 = pad_leading(jnp.asarray(ds.x[:n]), own)
-                y1 = pad_leading(jnp.asarray(ds.y[:n]), own)
+                x1 = pad_leading(jnp.asarray(x1), own)
+                y1 = pad_leading(jnp.asarray(y1), own)
                 m1 = (jnp.arange(own) < n).astype(jnp.float32)
                 # hold ds so the id() key stays unique for our lifetime
-                hit = (ds, x1, y1, m1)
+                hit = (ds, x1, y1, m1, n)
                 self._eval_data_cache[key] = hit
+            else:
+                self._eval_data_cache.move_to_end(key)
             singles.append(hit)
+            ns.append(hit[4])
+        # evict AFTER the batch, clamped to the call's own width: evicting
+        # inside the loop would let one wide sweep (e.g. the monitor's
+        # n_clients val sets with n_clients > the cap) evict its own
+        # entries mid-call and turn the cache into pure overhead
+        cap = max(self.eval_cache_entries, len(datasets))
+        while len(self._eval_data_cache) > cap:
+            self._eval_data_cache.popitem(last=False)
+        target = max(self._round_chunk(n) for n in ns)
         x = jnp.stack([pad_leading(s[1], target) for s in singles])
         y = jnp.stack([pad_leading(s[2], target) for s in singles])
         mask = jnp.stack([pad_leading(s[3], target) for s in singles])
@@ -404,30 +720,38 @@ class CohortBackend:
                              epochs: Optional[int] = None):
         """Train K clients as one program; returns (stacked params, losses).
 
-        ``losses[k]`` matches the sequential path's contract: the mean loss
-        over client k's LAST local epoch.
+        ``losses[k]`` matches the sequential path's per-backend contract
+        (see ``CohortPrograms.summarize_losses``).
         """
-        epochs = epochs or self.backend.local_epochs
+        epochs = epochs or self.programs.default_epochs
         xb, yb, mask, steps = self._prepare_train(datasets, seeds, epochs)
+        # mask-free fast path when no step padding exists: every client
+        # (and therefore every cohort-padding repeat) runs exactly _pad_T
+        # steps, so the masked and uniform programs are the same math
+        uniform = all(s == self._pad_T for s in steps)
         stacked_params, xb, yb, mask, k = self._pad_cohort(
             stacked_params, xb, yb, mask)
         if self.mesh is not None:
             # place params AND batch arrays client-sharded BEFORE entering
             # jit, so every host->mesh transfer happens once with the final
             # layout instead of bouncing through device 0
-            from repro.sharding.rules import (cohort_pspec,
+            from repro.sharding.rules import (cohort_batch_sharding,
                                               stacked_client_shardings)
-            from jax.sharding import NamedSharding
             stacked_params = jax.device_put(
                 stacked_params, stacked_client_shardings(
                     stacked_params, self.mesh, self.clients_axis))
-            sh = NamedSharding(self.mesh, cohort_pspec(self.clients_axis))
-            xb, yb, mask = (jax.device_put(a, sh) for a in (xb, yb, mask))
-        new_params, losses = self._train_jit(stacked_params, xb, yb, mask)
+            sh = cohort_batch_sharding(self.mesh, self.clients_axis)
+            xb, yb = (jax.device_put(a, sh) for a in (xb, yb))
+            if not uniform:          # the uniform program never reads mask
+                mask = jax.device_put(mask, sh)
+        if uniform:
+            new_params, losses = self._train_uniform_jit(stacked_params,
+                                                         xb, yb)
+        else:
+            new_params, losses = self._train_jit(stacked_params, xb, yb,
+                                                 mask)
         losses = np.asarray(losses)
-        per_epoch = [s // epochs for s in steps]
-        final = [float(np.mean(losses[i, s - per_epoch[i]:s]))
-                 for i, s in enumerate(steps)]
+        final = self.programs.summarize_losses(losses, steps, epochs)
         if k < losses.shape[0]:
             new_params = jax.tree_util.tree_map(lambda l: l[:k], new_params)
         return new_params, final
@@ -465,8 +789,7 @@ class CohortBackend:
         accs = self._eval_shared_jit(params, x, y, mask)
         return [float(a) for a in np.asarray(accs)[:k]]
 
-    def evaluate_many(self, params_list, ds: Dataset,
-                      limit: int = 512) -> List[float]:
+    def evaluate_many(self, params_list, ds, limit: int = 512) -> List[float]:
         """M candidate models on one validation shard (tip selection).
 
         The model axis is padded to the next power of two (with repeats) so
@@ -475,10 +798,12 @@ class CohortBackend:
         m = len(params_list)
         if m == 0:
             return []
-        if m == 1:
-            # one candidate: the backend's conv-form program wins — no
-            # stacking, no padding, and it shares the sequential jit cache
-            return [self.backend.evaluate(params_list[0], ds, limit)]
+        if m <= self.programs.eval_many_min_batch:
+            # tiny sweeps: the backend's own jitted program wins — no
+            # stacking, no pow2 model-axis padding, and it shares the
+            # sequential jit cache (threshold is suite-specific)
+            return [self.programs.evaluate_one(p, ds, limit)
+                    for p in params_list]
         m_pad = next_pow2(m)
         if self._n_shards > 1:
             m_pad = round_up_multiple(m_pad, self._n_shards)
@@ -491,10 +816,10 @@ class CohortBackend:
 
     def signature_cohort_stacked(self, stacked_params, datasets,
                                  limit: int = 128) -> np.ndarray:
-        """(K, channels) Eq. 3 signatures, one masked batched dispatch."""
-        x, _, mask = self._eval_arrays(datasets, limit)
+        """(K, dims) Eq. 3 signatures, one masked batched dispatch."""
+        x, _, mask = self._eval_arrays(datasets, limit, kind="sig")
         # pass mask in the label slot: _pad_cohort pads a (K, N) array there,
-        # not a second full copy of the (K, N, H, W, C) images
+        # not a second full copy of the (K, N, ...) sample batch
         stacked_params, x, _, mask, k = self._pad_cohort(
             stacked_params, x, mask, mask)
         sigs = self._sig_jit(stacked_params, x, mask)
@@ -504,3 +829,41 @@ class CohortBackend:
                          limit: int = 128) -> np.ndarray:
         return self.signature_cohort_stacked(tree_stack(params_list),
                                              datasets, limit)
+
+
+# ---------------------------------------------------------------------------
+# engine construction helpers (shared by the coordinator and all baselines)
+# ---------------------------------------------------------------------------
+
+
+def resolve_cohort_mesh(mesh, cohort_size: int, clients_axis: str = "clients"):
+    """``"auto"`` -> a clients mesh clamped to this host's devices (never
+    raises; 1 device degrades to the single-device engine), ``None`` ->
+    single-device, a Mesh -> itself."""
+    if isinstance(mesh, str):
+        if mesh != "auto":
+            raise ValueError(f"mesh must be 'auto', None or a Mesh: {mesh!r}")
+        from repro.launch.mesh import make_cohort_mesh
+        return make_cohort_mesh(cohort_size, axis=clients_axis)
+    return mesh
+
+
+def build_cohort_engine(backend, train_shards: Sequence, *,
+                        cohort_size: int, mesh="auto",
+                        clients_axis: str = "clients",
+                        epochs: Optional[int] = None
+                        ) -> Optional[CohortBackend]:
+    """One-stop engine construction for any registered backend family:
+    resolves the mesh, builds the engine, and pre-registers the training
+    shards so the first flush compiles the steady-state program.  Returns
+    ``None`` when cohort execution is off (``cohort_size <= 1``) or the
+    backend has no registered program suite — callers then run the
+    sequential path."""
+    if cohort_size <= 1 or not CohortBackend.supports(backend):
+        return None
+    engine = CohortBackend(
+        backend, capacity=cohort_size,
+        mesh=resolve_cohort_mesh(mesh, cohort_size, clients_axis),
+        clients_axis=clients_axis)
+    engine.register_shards(train_shards, epochs=epochs)
+    return engine

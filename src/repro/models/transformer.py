@@ -346,6 +346,21 @@ def forward_hidden(params, batch, cfg: ArchConfig, runtime: Runtime = DEFAULT,
     return x, aux, caches
 
 
+def per_sample_signature(h, runtime: Runtime = DEFAULT):
+    """Per-sample Eq. 3 signature rows from the designated signature layer.
+
+    ``forward_hidden`` emits ONE signature averaged over the whole batch
+    (``aux["signature"]``); the cohort engine needs a (B, n_sig) row per
+    sample so padded rows can be masked out of the mean.  Rows of equal
+    length average back to the fused signature exactly, so the two paths
+    agree whenever no padding is present.
+    h: (B, S, d) activations of the designated layer (the final-norm
+    output, matching ``Runtime.want_signature``).
+    """
+    return jax.vmap(lambda row: activation_signature(
+        row, runtime.signature_dims, runtime.signature_tau))(h)
+
+
 def forward(params, batch, cfg: ArchConfig, runtime: Runtime = DEFAULT,
             collect_cache: bool = False, mode: str = "train"):
     """Full logits (B,S,V) f32 — eval/tests; serving and training use the

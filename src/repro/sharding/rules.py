@@ -330,6 +330,16 @@ def cohort_pspec(axis: str = "clients") -> P:
     return P(axis)
 
 
+def cohort_batch_sharding(mesh: Mesh, axis: str = "clients") -> NamedSharding:
+    """NamedSharding for a cohort batch array (xb/yb/mask): leading client
+    axis over ``axis``, all data dims replicated.  One rule for every
+    backend family — the engine never inspects what the trailing dims hold
+    (image batches, token windows, masks)."""
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh {tuple(mesh.axis_names)} has no {axis!r} axis")
+    return NamedSharding(mesh, cohort_pspec(axis))
+
+
 def stacked_client_shardings(stacked, mesh: Mesh, axis: str = "clients"):
     """NamedShardings for a ``tree_stack``-ed K-client pytree: every leaf's
     leading K axis over ``axis``, remaining dims replicated.  K must divide

@@ -1,0 +1,205 @@
+"""LM cohort programs: equivalence with the sequential transformer path.
+
+The contract under test (ISSUE 3 tentpole): ``LMCohortPrograms`` makes the
+vectorized cohort engine produce, for ragged transformer cohorts, exactly
+the per-client weights / losses / next-token accuracies / Eq. 3 signatures
+that K sequential ``LMBackend`` calls produce with the same seeds — and the
+shared execution machinery (padding, masking, LRU eval cache, shard_map
+mesh) behaves identically to the CNN suite.
+
+Single-device hosts run everything except the mesh-equivalence test, which
+CI's multi-device job (``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+exercises for real.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.data import make_lm_dataset
+from repro.fl.backend import LMBackend
+from repro.fl.cohort import CohortBackend, LMCohortPrograms, build_cohort_engine
+from repro.launch.mesh import make_cohort_mesh
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >=2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=N before jax import)")
+
+# the LM suite runs the SAME forward graph in both engines (no conv-lowering
+# rewrite like the CNN suite), so the budget is pure float-reduction noise
+ATOL = 1e-4
+
+
+def _leaves_close(a, b, atol=ATOL):
+    return all(np.allclose(x, y, atol=atol) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+def _world(local_steps=3, batch_size=4, seq_len=16):
+    cfg = dataclasses.replace(reduced(get_config("internlm2-1.8b"),
+                                      d_model=64), vocab_size=128)
+    return LMBackend(cfg, lr=5e-3, local_steps=local_steps,
+                     batch_size=batch_size, seq_len=seq_len)
+
+
+def _streams(n, vocab=128, n_tokens=1200, seed=0):
+    return [make_lm_dataset(vocab=vocab, n_tokens=n_tokens, order=2.0,
+                            seed=seed + i) for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def world():
+    backend = _world()
+    return backend, _streams(3)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(2, 4), st.integers(0, 2 ** 31 - 1))
+def test_lm_cohort_train_matches_sequential(n_clients, seed):
+    """Same seeds => same per-client transformer weights, sequential vs
+    vmapped — including a cohort axis padded to capacity."""
+    backend = _world()
+    rng = np.random.default_rng(seed)
+    streams = _streams(n_clients, n_tokens=int(rng.integers(800, 2000)),
+                       seed=seed % 1000)
+    cohort = CohortBackend(backend, capacity=4)
+    params = [backend.init(jax.random.PRNGKey(seed % 7 + i))
+              for i in range(n_clients)]
+    seeds = [int(rng.integers(2 ** 31)) for _ in range(n_clients)]
+
+    seq = [backend.train_local(p, d, seed=s)
+           for p, d, s in zip(params, streams, seeds)]
+    coh_params, coh_losses = cohort.train_cohort(params, streams, seeds)
+
+    for i in range(n_clients):
+        assert _leaves_close(seq[i][0], coh_params[i]), f"client {i} diverged"
+        assert seq[i][1] == pytest.approx(coh_losses[i], abs=1e-3)
+
+
+def test_lm_eval_signature_shared_many_match_sequential(world):
+    backend, streams = world
+    cohort = CohortBackend(backend, capacity=4)
+    models = [backend.train_local(backend.init(jax.random.PRNGKey(i)),
+                                  streams[i], seed=i)[0] for i in range(3)]
+
+    accs = cohort.evaluate_cohort(models, streams)
+    for a, (m, d) in zip(accs, zip(models, streams)):
+        assert a == pytest.approx(backend.evaluate(m, d), abs=1e-5)
+
+    sigs = cohort.signature_cohort(models, streams)
+    for s, (m, d) in zip(sigs, zip(models, streams)):
+        assert np.allclose(s, backend.signature(m, d), atol=1e-5)
+
+    shared = cohort.evaluate_shared(models[0], streams)
+    for a, d in zip(shared, streams):
+        assert a == pytest.approx(backend.evaluate(models[0], d), abs=1e-5)
+
+    # 4 models: strictly above eval_many_min_batch (3), so this exercises
+    # the vmapped pow2-padded _eval_many_impl branch, not the fast path
+    four = models + [backend.init(jax.random.PRNGKey(9))]
+    assert len(four) > cohort.programs.eval_many_min_batch
+    many = cohort.evaluate_many(four, streams[0])
+    for a, m in zip(many, four):
+        assert a == pytest.approx(backend.evaluate(m, streams[0]), abs=1e-5)
+    # M <= min_batch goes through the sequential program
+    assert cohort.evaluate_many(models[:1], streams[0])[0] == pytest.approx(
+        backend.evaluate(models[0], streams[0]), abs=1e-6)
+
+
+def test_eval_cache_eviction_does_not_change_results(world):
+    """The LRU bound on the eval-data cache is an execution detail: a
+    1-entry cache (every call evicts) must score identically to the
+    default, and the cache must actually stay bounded."""
+    backend, streams = world
+    model = backend.init(jax.random.PRNGKey(3))
+    roomy = CohortBackend(backend, capacity=4)
+    tiny = CohortBackend(backend, capacity=4, eval_cache_entries=1)
+    for _ in range(2):                     # second pass hits/evicts
+        a = roomy.evaluate_shared(model, streams)
+        b = tiny.evaluate_shared(model, streams)
+        assert np.allclose(a, b, atol=0.0)
+    # the bound clamps to the widest call so a sweep can't evict its own
+    # entries mid-loop; a narrower follow-up call shrinks it back down
+    assert len(tiny._eval_data_cache) <= max(1, len(streams))
+    tiny.evaluate_shared(model, streams[:1])
+    assert len(tiny._eval_data_cache) == 1
+    assert len(roomy._eval_data_cache) <= roomy.eval_cache_entries
+
+
+def test_build_cohort_engine_is_backend_agnostic(world):
+    backend, streams = world
+    assert CohortBackend.supports(backend)
+    eng = build_cohort_engine(backend, streams, cohort_size=4, mesh=None)
+    assert isinstance(eng.programs, LMCohortPrograms)
+    assert eng._pad_T == backend.local_steps     # shards pre-registered
+    assert build_cohort_engine(backend, streams, cohort_size=1) is None
+    assert build_cohort_engine(object(), streams, cohort_size=4) is None
+
+
+def test_lm_coordinator_cohort_run_short_rounds_clamp(world):
+    """End-to-end LM cohort run where every round is SHORTER than the
+    cohort window: publishes whose completion times precede the flush are
+    clamped to the flush time (EventLoop.clamped counts them), every
+    scheduled round still completes, and the DAG audits clean."""
+    from repro.core import (DagAflConfig, DagAflCoordinator,
+                            TipSelectionConfig, verify_full_dag)
+    from repro.core.simulator import CostModel, make_profiles
+
+    backend, streams = world
+    cd = [{"train": s, "val": s, "test": s} for s in streams]
+    gt = make_lm_dataset(vocab=backend.cfg.vocab_size, n_tokens=1200, seed=9)
+    # rounds cost ~0.03 simulated seconds; the window flushes after 10 —
+    # every batched publish lands before its window closes
+    cfg = DagAflConfig(n_clients=3, max_rounds=2, local_epochs=2,
+                       tip=TipSelectionConfig(n_select=2), seed=0,
+                       cohort_size=3, cohort_window=10.0, mesh=None)
+    coord = DagAflCoordinator(backend, cd, gt, cfg,
+                              CostModel(local_epoch=0.01, eval_batch=0.001,
+                                        signature=0.001, chain_op=0.0001),
+                              make_profiles(3, 0.2, 0))
+    res = coord.run()
+    ok, reason = verify_full_dag(coord.ledger)
+    assert ok, reason
+    assert res.rounds == cfg.n_clients * cfg.max_rounds
+    assert res.extra["cohorts_dispatched"] >= 1
+    assert coord.loop.clamped > 0          # short rounds hit the clamp
+    # simulated time stayed monotone through the clamped publishes
+    stamps = [tx.timestamp for tx in coord.ledger.nodes.values()]
+    assert all(t >= 0.0 for t in stamps)
+
+
+# -- mesh-sharded LM cohort (runs for real in CI's multi-device job) ---------
+
+
+@multi_device
+def test_lm_sharded_cohort_matches_single_device():
+    """Ragged LM cohorts on a clients mesh: shard_map must reproduce the
+    single-device vmap engine's weights, accuracies and signatures."""
+    backend = _world()
+    n_clients = 3                           # not divisible by a 2/4-mesh
+    streams = _streams(n_clients, seed=7)
+    mesh = make_cohort_mesh(min(N_DEV, 4))
+    single = CohortBackend(backend, capacity=n_clients)
+    sharded = CohortBackend(backend, capacity=n_clients, mesh=mesh)
+    rng = np.random.default_rng(0)
+    params = [backend.init(jax.random.PRNGKey(i)) for i in range(n_clients)]
+    seeds = [int(rng.integers(2 ** 31)) for _ in range(n_clients)]
+
+    p1, l1 = single.train_cohort(params, streams, seeds)
+    p2, l2 = sharded.train_cohort(params, streams, seeds)
+    for i in range(n_clients):
+        assert _leaves_close(p1[i], p2[i]), f"client {i} diverged"
+        assert l1[i] == pytest.approx(l2[i], abs=1e-3)
+
+    assert np.allclose(single.evaluate_cohort(p1, streams),
+                       sharded.evaluate_cohort(p2, streams), atol=1e-4)
+    assert np.allclose(single.signature_cohort(p1, streams),
+                       sharded.signature_cohort(p2, streams), atol=1e-4)
+    assert np.allclose(single.evaluate_shared(p1[0], streams),
+                       sharded.evaluate_shared(p2[0], streams), atol=1e-4)
+    assert np.allclose(single.evaluate_many(p1, streams[0]),
+                       sharded.evaluate_many(p2, streams[0]), atol=1e-4)

@@ -50,6 +50,43 @@ def test_latest_of_client():
     assert led.latest_of(99) is None
 
 
+def test_latest_of_tie_breaking_keeps_insertion_order():
+    """Equal timestamps: the LATEST-inserted transaction wins (regression
+    for the O(1) per-client index — the old full scan iterated the
+    insertion-ordered node dict with a >= comparison)."""
+    led = build_ledger()
+    g = led.genesis_id
+    first = led.add_transaction(meta(0, 1), [g], 5.0)
+    second = led.add_transaction(meta(0, 2), [g], 5.0)   # same timestamp
+    assert led.latest_of(0) == second.tx_id
+    # an EARLIER timestamp never displaces the index
+    led.add_transaction(meta(0, 3), [g], 1.0)
+    assert led.latest_of(0) == second.tx_id
+
+
+def _scan_latest_of(led, client_id):
+    """The pre-index O(ledger) reference implementation."""
+    best, best_t = None, -1.0
+    for tx in led.nodes.values():
+        if tx.metadata.client_id == client_id and tx.timestamp >= best_t:
+            best, best_t = tx.tx_id, tx.timestamp
+    return best
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 50)),
+                min_size=1, max_size=40))
+def test_latest_of_index_matches_full_scan(ops):
+    """Property: the per-client index agrees with the full scan for any
+    append order, including repeated and out-of-order timestamps."""
+    led = build_ledger()
+    for cid, ts in ops:
+        led.add_transaction(meta(cid, 1), [led.genesis_id], float(ts) / 7.0)
+    for cid in range(5):
+        assert led.latest_of(cid) == _scan_latest_of(led, cid)
+    assert led.latest_of(-1) == led.genesis_id
+
+
 def test_reachability_split():
     """Tips descending from the client's node are reachable, others not."""
     led = build_ledger()

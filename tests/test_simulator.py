@@ -29,6 +29,54 @@ def test_nested_scheduling():
     assert seen == [1.0, 2.5]
 
 
+def test_negative_delay_clamps_to_now():
+    """Scheduling into the past clamps to the present (the cohort path
+    produces negative delays when a round finishes before its window
+    flushes) — observable via the ``clamped`` counter, and simulated time
+    never runs backwards."""
+    loop = EventLoop()
+    seen = []
+
+    def late():
+        # now == 5.0; this round "completed" at 3.0 — publish clamps to now
+        loop.schedule(3.0 - loop.now, lambda: seen.append(loop.now))
+
+    loop.schedule(5.0, late)
+    loop.run()
+    assert seen == [5.0]
+    assert loop.clamped == 1
+    assert loop.now == 5.0
+
+
+def test_cohort_window_round_shorter_than_window():
+    """A batch whose rounds all complete before the window closes: the
+    flush still dispatches every request (via the close timer), and the
+    completion callbacks scheduled into the past land AT the flush time in
+    order."""
+    from repro.core.simulator import CohortWindow
+
+    loop = EventLoop()
+    published = []
+
+    def flush(batch):
+        for item, t_start in batch:
+            # each round took 0.1 simulated seconds — far less than the
+            # 5.0 window, so every publish time precedes the flush
+            loop.schedule(t_start + 0.1 - loop.now,
+                          lambda item=item: published.append((item, loop.now)))
+
+    window = CohortWindow(loop, capacity=10, window=5.0, flush_fn=flush,
+                          stop_fn=lambda: False)
+    for i, d in enumerate((0.0, 0.5, 1.0)):
+        loop.schedule(d, lambda i=i: window.add(i))
+    loop.run()
+    # window opened at 0.0 -> flushed by the timer at 5.0; all three
+    # publishes clamped to the flush instant
+    assert [i for i, _ in published] == [0, 1, 2]
+    assert all(t == 5.0 for _, t in published)
+    assert loop.clamped == 3
+
+
 def test_stop_predicate():
     loop = EventLoop()
     count = []

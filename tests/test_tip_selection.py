@@ -7,7 +7,7 @@ import pytest
 from repro.core.dag import DAGLedger, TxMetadata
 from repro.core.signature import SimilarityContract
 from repro.core.tip_selection import (TipSelectionConfig, freshness,
-                                      select_tips, tipc)
+                                      select_tips, tipc, top_up_tips)
 
 
 def meta(cid, epoch, sig=(1.0, 0.0)):
@@ -122,3 +122,61 @@ def test_own_tip_used_when_alone():
     chosen = select_tips(led, 0, 1, 2.0, lambda t: 0.5, None,
                          TipSelectionConfig(n_select=2))
     assert chosen and chosen[0].tx_id == mine.tx_id
+
+
+# -- top-up (small DAGs): freshness x accuracy rank, batched validation ------
+
+
+def test_top_up_ranks_by_freshness_times_accuracy():
+    """The top-up must rank by the paper's score, not freshness alone: a
+    fresh-but-bad tip loses to a slightly staler accurate one."""
+    fresh = {"stale_good": 0.8, "fresh_bad": 1.0, "mid": 0.9}.__getitem__
+    accs = {"stale_good": 0.9, "fresh_bad": 0.1, "mid": 0.5}
+    out = top_up_tips([], ["stale_good", "fresh_bad", "mid"], [],
+                      fresh, accs.__getitem__, None, 2)
+    assert [s.tx_id for s in out] == ["stale_good", "mid"]
+    for s in out:
+        assert s.score == pytest.approx(fresh(s.tx_id) * accs[s.tx_id])
+
+
+def test_top_up_batch_eval_warms_cache_zero_sequential_evals():
+    """With evaluate_batch provided, the per-tip evaluate_fn must serve
+    every top-up candidate from the warmed cache: zero sequential
+    (cache-missing) evaluations."""
+    cache = {}
+    sequential_evals = []
+
+    def evaluate_batch(tx_ids):
+        for t in tx_ids:                   # one vectorized dispatch
+            cache[t] = 0.5
+
+    def evaluate_fn(t):
+        if t not in cache:                 # the bug: per-tip dispatch
+            sequential_evals.append(t)
+            cache[t] = 0.5
+        return cache[t]
+
+    out = top_up_tips([], ["a", "b", "c"], ["a"], lambda t: 1.0,
+                      evaluate_fn, evaluate_batch, 2)
+    assert len(out) == 2
+    assert sequential_evals == []          # batch warmed everything
+    assert {s.tx_id for s in out} <= {"a", "b", "c"}
+
+
+def test_top_up_computes_freshness_once_per_candidate():
+    calls = []
+
+    def fresh(t):
+        calls.append(t)
+        return 1.0
+
+    top_up_tips([], ["a", "b", "c"], [], fresh, lambda t: 0.5, None, 3)
+    assert sorted(calls) == ["a", "b", "c"]      # exactly once each
+
+
+def test_top_up_skips_already_chosen():
+    from repro.core.tip_selection import TipScore
+    chosen = [TipScore("a", True, 1.0, 0.9, 0.9)]
+    out = top_up_tips(chosen, ["a", "b"], [], lambda t: 1.0,
+                      lambda t: 0.5, None, 2)
+    assert [s.tx_id for s in out] == ["b"]
