@@ -142,10 +142,11 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
                          n_samples: int = 6000, max_rounds: int = 2,
                          local_epochs: int = 2, cohort_window: float = 2.0,
                          seed: int = 0, warmup: bool = True,
-                         mesh_devices: int = 0,
+                         mesh_shape=(0, 1),
                          clients_axis: str = "clients",
                          backend_kind: str = "cnn",
-                         repeats: int = 1) -> Dict[str, float]:
+                         repeats: int = 1,
+                         overlap: bool = True) -> Dict[str, float]:
     """Wall-clock: sequential DAG-AFL vs the K-client cohort engine.
 
     Same backend, same data, same simulated-cost model and seed; the only
@@ -155,13 +156,15 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
     under test: ``"cnn"`` (paper VGG path) or ``"lm"`` (transformer path,
     ``n_samples`` = tokens per client stream).
 
-    ``mesh_devices > 1`` additionally measures the mesh-sharded SPMD engine
-    (``shard_map`` over a ``clients`` axis of that many devices, clamped to
-    what the host has — use ``XLA_FLAGS=--xla_force_host_platform_device_
-    count=N`` on CPU): a third run on the same data reports the sharded
-    wall clock, its speedup vs sequential, and its accuracy gap vs the
-    single-device cohort path (``mesh_accuracy_gap`` — numerics must agree
-    across partitionings, not just engines).
+    ``mesh_shape=(C, D)`` with ``C*D > 1`` additionally measures the
+    mesh-sharded SPMD engine (``shard_map`` over a ``clients`` axis of C
+    devices, times a ``data`` axis of D sharding each client group's batch
+    — clamped to what the host has; use ``XLA_FLAGS=--xla_force_host_
+    platform_device_count=N`` on CPU): a third run on the same data reports
+    the sharded wall clock, its speedup vs sequential, and its accuracy gap
+    vs the single-device cohort path (``mesh_accuracy_gap`` — numerics must
+    agree across partitionings, not just engines).  ``overlap`` toggles the
+    double-buffered host batch-assembly pipeline on every engine.
     """
     import jax  # noqa: F401  (ensures backend selected before timing)
 
@@ -177,13 +180,15 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
     # simulated round durations (and so the cohort windows' fill dynamics)
     # should reflect that
     cost = CostModel(local_epoch=2.0 if backend_kind == "cnn" else 0.25)
-    engine = CohortBackend(backend, capacity=cohort_size)
+    engine = CohortBackend(backend, capacity=cohort_size, overlap=overlap)
     engine_sharded = None
-    if mesh_devices and mesh_devices > 1:
+    mesh_c, mesh_d = mesh_shape
+    if mesh_c * max(mesh_d, 1) > 1:
         from repro.launch.mesh import make_cohort_mesh
-        mesh = make_cohort_mesh(mesh_devices, axis=clients_axis)
+        mesh = make_cohort_mesh(mesh_c, axis=clients_axis, data=mesh_d)
         engine_sharded = CohortBackend(backend, capacity=cohort_size,
-                                       mesh=mesh, clients_axis=clients_axis)
+                                       mesh=mesh, clients_axis=clients_axis,
+                                       overlap=overlap)
         if engine_sharded.mesh is None:       # host clamped to one device
             engine_sharded = None
     profiles = make_profiles(n_clients, 0.5, seed)
@@ -223,6 +228,7 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
     t_coh, res_coh = run(cohort_size, max_rounds, engine)
     out = {
         "backend": backend_kind,
+        "overlap": bool(overlap),
         "seq_wall_s": t_seq,
         "cohort_wall_s": t_coh,
         "speedup": t_seq / max(t_coh, 1e-9),
@@ -240,6 +246,9 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
         out.update({
             "mesh_devices": int(
                 dict(engine_sharded.mesh.shape)[clients_axis]),
+            "mesh_data_devices": int(engine_sharded._n_data),
+            "mesh_shape": f"{dict(engine_sharded.mesh.shape)[clients_axis]}"
+                          f"x{engine_sharded._n_data}",
             "sharded_wall_s": t_sh,
             "sharded_speedup": t_seq / max(t_sh, 1e-9),
             "sharded_vs_cohort_speedup": t_coh / max(t_sh, 1e-9),
@@ -263,7 +272,7 @@ def cohort_rows(result: Dict[str, float], n_clients: int,
         f"{result['seq_wall_s']*1e6:.0f},{result['accuracy_gap']*100:.2f}",
     ]
     if "sharded_wall_s" in result:
-        mtag = f"{tag}_d{result['mesh_devices']}"
+        mtag = f"{tag}_m{result.get('mesh_shape', result['mesh_devices'])}"
         rows += [
             f"cohort_sharded_speedup[{mtag}],"
             f"{result['sharded_wall_s']*1e6:.0f},"
@@ -305,12 +314,19 @@ def main() -> None:
     ap.add_argument("--backend", choices=sorted(_WORLDS), default="cnn",
                     help="cohort program suite under test: the paper VGG "
                          "path (cnn) or the transformer path (lm)")
-    ap.add_argument("--mesh", type=int, default=0,
-                    help="also measure the shard_map SPMD engine on a "
-                         "clients-axis mesh of this many devices (clamped "
-                         "to the host; 0/1 = single-device only)")
+    ap.add_argument("--mesh", default="0",
+                    help="also measure the shard_map SPMD engine on this "
+                         "mesh: N (1-D clients axis) or CxD (2-D clients x "
+                         "data, e.g. 4x2 — the data axis shards each client "
+                         "group's batch), clamped to the host; 0/1 = "
+                         "single-device only")
     ap.add_argument("--clients-axis", default="clients",
                     help="mesh axis name the cohort programs shard over")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="double-buffered host batch assembly (--no-overlap "
+                         "= inline assembly; results are bit-identical, "
+                         "only wall clock moves)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke geometry (small data, one round)")
     ap.add_argument("--repeats", type=int, default=2,
@@ -330,12 +346,17 @@ def main() -> None:
             # the window so the cheaper LM rounds still fill their cohorts
             kw["local_epochs"] = 4 * (1 if args.quick else 2)
             kw["cohort_window"] = 4.0
+        from repro.fl.cohort import parse_mesh_spec
+        mesh_c, mesh_d = parse_mesh_spec(args.mesh)
+        if mesh_c == "auto":
+            mesh_c = args.cohort_size
         res = bench_cohort_speedup(n_clients=args.n_clients,
                                    cohort_size=args.cohort_size,
-                                   mesh_devices=args.mesh,
+                                   mesh_shape=(mesh_c, mesh_d),
                                    clients_axis=args.clients_axis,
                                    backend_kind=args.backend,
-                                   repeats=args.repeats, **kw)
+                                   repeats=args.repeats,
+                                   overlap=args.overlap, **kw)
         for r in cohort_rows(res, args.n_clients, args.cohort_size):
             print(r)
         print(f"# sequential {res['seq_wall_s']:.1f}s "
@@ -344,12 +365,12 @@ def main() -> None:
               f" -> {res['speedup']:.2f}x, "
               f"{res['cohorts_dispatched']} cohorts")
         if "sharded_wall_s" in res:
-            print(f"# sharded ({res['mesh_devices']} devices) "
+            print(f"# sharded (mesh {res['mesh_shape']}) "
                   f"{res['sharded_wall_s']:.1f}s "
                   f"(acc {res['sharded_accuracy']:.3f}) -> "
                   f"{res['sharded_speedup']:.2f}x vs sequential, "
                   f"mesh acc gap {res['mesh_accuracy_gap']*100:.2f} pts")
-        elif args.mesh and args.mesh > 1:
+        elif mesh_c * max(mesh_d, 1) > 1:
             print("# mesh requested but host has one device; sharded run "
                   "skipped (set XLA_FLAGS=--xla_force_host_platform_"
                   "device_count=N)")

@@ -13,7 +13,12 @@ in ``benchmarks/baseline_thresholds.json`` and exits non-zero on regression:
   * ``mesh_accuracy_gap``  — (only present when the smoke ran with
                              ``--mesh``) sharded SPMD vs single-device
                              cohort accuracy; mesh partitioning must not
-                             change numerics.
+                             change numerics.  This covers the 2-D
+                             (clients, data) mesh too: a ``--mesh CxD``
+                             smoke's gap compares data-sharded gradients
+                             against the single-device path, and
+                             ``--require-data-axis`` pins CI to actually
+                             exercising it.
 
 The sharded wall-clock is reported but NOT gated: on CI's 2-core runners a
 forced 8-device host mesh oversubscribes cores, so its speedup measures the
@@ -86,6 +91,11 @@ def main() -> None:
                     help="fail unless the results carry the sharded-engine "
                          "fields (the smoke must have run with --mesh on a "
                          "multi-device host)")
+    ap.add_argument("--require-data-axis", action="store_true",
+                    help="fail unless the sharded run used a 2-D (clients, "
+                         "data) mesh with data > 1 (the smoke must have run "
+                         "with --mesh CxD, D >= 2, on a host with enough "
+                         "devices)")
     args = ap.parse_args()
 
     with open(args.results) as f:
@@ -97,9 +107,14 @@ def main() -> None:
     if args.require_mesh and "mesh_accuracy_gap" not in results:
         failures.append("--require-mesh: no sharded-engine results; the "
                         "multi-device smoke did not exercise shard_map")
+    if args.require_data_axis and results.get("mesh_data_devices", 1) < 2:
+        failures.append("--require-data-axis: the smoke did not exercise "
+                        "the 2-D (clients, data) mesh (mesh_data_devices="
+                        f"{results.get('mesh_data_devices', 1)})")
 
-    print(f"perf gate[{results.get('backend', 'cnn')}]: "
-          f"speedup={results.get('speedup', float('nan')):.2f}x "
+    print(f"perf gate[{results.get('backend', 'cnn')}"
+          f"{',' + results['mesh_shape'] if 'mesh_shape' in results else ''}"
+          f"]: speedup={results.get('speedup', float('nan')):.2f}x "
           f"acc_gap={results.get('accuracy_gap', float('nan')):.4f} "
           f"mesh_acc_gap={results.get('mesh_accuracy_gap', float('nan')):.4f}"
           f" sharded_speedup="

@@ -25,9 +25,10 @@ def main() -> None:
                          "this batch size (cohort_speedup[...] rows)")
     ap.add_argument("--n-clients", type=int, default=16,
                     help="client count for the cohort engine benchmark")
-    ap.add_argument("--mesh", type=int, default=0,
+    ap.add_argument("--mesh", default="0",
                     help="also benchmark the mesh-sharded SPMD cohort "
-                         "engine on this many devices (0 = skip)")
+                         "engine: N devices or CxD (2-D clients x data, "
+                         "e.g. 4x2); 0 = skip")
     args = ap.parse_args()
 
     rows = []
@@ -37,15 +38,19 @@ def main() -> None:
     rows += chain_perf.rows(chain_results)
 
     if args.cohort_size:
+        from repro.fl.cohort import parse_mesh_spec
+        mesh_c, mesh_d = parse_mesh_spec(args.mesh)
+        if mesh_c == "auto":
+            mesh_c = args.cohort_size
         res = chain_perf.bench_cohort_speedup(
             n_clients=args.n_clients, cohort_size=args.cohort_size,
-            mesh_devices=args.mesh)
+            mesh_shape=(mesh_c, mesh_d))
         rows += chain_perf.cohort_rows(res, args.n_clients, args.cohort_size)
         print(f"# cohort engine: {res['speedup']:.2f}x wall-clock, "
               f"accuracy gap {res['accuracy_gap']*100:.2f} pts",
               file=sys.stderr)
         if "sharded_speedup" in res:
-            print(f"# sharded cohort engine ({res['mesh_devices']} devices): "
+            print(f"# sharded cohort engine (mesh {res['mesh_shape']}): "
                   f"{res['sharded_speedup']:.2f}x wall-clock, mesh accuracy "
                   f"gap {res['mesh_accuracy_gap']*100:.2f} pts",
                   file=sys.stderr)

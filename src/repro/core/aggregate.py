@@ -12,6 +12,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @jax.jit
@@ -86,33 +87,38 @@ def _quantized_target(x: int, n: int) -> int:
 _COLLECTIVE_CACHE = {}
 
 
-def _psum_reducer(mesh, axis_name: str, kind: str):
+def _psum_reducer(mesh, axis_names: tuple, kind: str):
     """Cached jitted shard_map programs reducing a LIST of float leaves whose
-    leading axis is sharded over ``axis_name``.
+    leading axis is sharded over ``axis_names`` (one mesh axis, or — on the
+    2-D (clients, data) cohort mesh — BOTH axes, so every device in the mesh
+    holds a slice of the stacked models and one psum over the axis pair
+    assembles the aggregate).
 
     ``sum``:  leaves (M, ...) -> total over M, replicated.
     ``wsum``: leaves (M, ...) + weights (K, M) -> (K, ...) einsum, replicated.
     Padding rows must carry zeros (zero weight) — they fall out of the sum.
     """
-    key = (mesh, axis_name, kind)
+    key = (mesh, axis_names, kind)
     fn = _COLLECTIVE_CACHE.get(key)
     if fn is not None:
         return fn
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
+    lead = axis_names if len(axis_names) > 1 else axis_names[0]
     if kind == "sum":
         def local(leaves):
-            return [jax.lax.psum(jnp.sum(l, axis=0), axis_name)
+            return [jax.lax.psum(jnp.sum(l, axis=0), axis_names)
                     for l in leaves]
-        fn = jax.jit(shard_map(local, mesh=mesh, in_specs=(P(axis_name),),
+        fn = jax.jit(shard_map(local, mesh=mesh, in_specs=(P(lead),),
                                out_specs=P()))
     elif kind == "wsum":
         def local(leaves, w):
-            return [jax.lax.psum(jnp.einsum("km,m...->k...", w, l), axis_name)
+            return [jax.lax.psum(jnp.einsum("km,m...->k...", w, l),
+                                 axis_names)
                     for l in leaves]
         fn = jax.jit(shard_map(local, mesh=mesh,
-                               in_specs=(P(axis_name), P(None, axis_name)),
+                               in_specs=(P(lead), P(None, lead)),
                                out_specs=P()))
     else:
         raise ValueError(kind)
@@ -121,9 +127,20 @@ def _psum_reducer(mesh, axis_name: str, kind: str):
 
 
 def _mesh_axis_size(mesh, axis_name: str) -> int:
-    if mesh is None:
+    if mesh is None or axis_name is None:
         return 1
     return int(dict(mesh.shape).get(axis_name, 1))
+
+
+def _reduce_axes(mesh, axis_name: str, data_axis) -> tuple:
+    """Mesh axes a stacked reduction shards its leading dim over: the
+    clients axis, joined by the data axis when the mesh carries one larger
+    than 1 (2-D cohort mesh — aggregation has no per-sample structure, so
+    the model axis simply spreads over every device)."""
+    axes = (axis_name,)
+    if _mesh_axis_size(mesh, data_axis) > 1:
+        axes = axes + (data_axis,)
+    return axes
 
 
 def tree_stack(models: Sequence):
@@ -146,14 +163,19 @@ def _stacked_mean_single(stacked):
         if jnp.issubdtype(leaf.dtype, jnp.floating) else leaf[0], stacked)
 
 
-def stacked_mean(stacked, mesh=None, axis_name: str = "clients"):
+def stacked_mean(stacked, mesh=None, axis_name: str = "clients",
+                 data_axis=None):
     """Eq. 6 over a stacked tree: mean over the leading client axis.
 
     With a ``mesh`` whose ``axis_name`` axis is larger than one, the leading
     axis is treated as sharded over it: each device part-sums its local
     clients and one ``psum`` yields the mean (leading axis zero-padded to a
-    mesh-size multiple; zeros drop out of the sum, the divisor stays K)."""
-    n = _mesh_axis_size(mesh, axis_name)
+    mesh-size multiple; zeros drop out of the sum, the divisor stays K).
+    On a 2-D (clients, data) cohort mesh, pass ``data_axis`` to spread the
+    stacked axis over BOTH mesh axes — the psum then runs over the axis
+    pair and every device carries 1/(C*D) of the models."""
+    axes = _reduce_axes(mesh, axis_name, data_axis)
+    n = int(np.prod([_mesh_axis_size(mesh, a) for a in axes]))
     if n <= 1:
         return _stacked_mean_single(stacked)
     leaves, treedef = jax.tree_util.tree_flatten(stacked)
@@ -162,13 +184,14 @@ def stacked_mean(stacked, mesh=None, axis_name: str = "clients"):
     is_f = [jnp.issubdtype(l.dtype, jnp.floating) for l in leaves]
     floats = [pad_leading(l.astype(jnp.float32), target)
               for l, f in zip(leaves, is_f) if f]
-    summed = iter(_psum_reducer(mesh, axis_name, "sum")(floats)
+    summed = iter(_psum_reducer(mesh, axes, "sum")(floats)
                   if floats else [])
     out = [next(summed) / k if f else l[0] for l, f in zip(leaves, is_f)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def stacked_weighted(stacked, weights, mesh=None, axis_name: str = "clients"):
+def stacked_weighted(stacked, weights, mesh=None, axis_name: str = "clients",
+                     data_axis=None):
     """Weighted aggregation over a stacked tree's leading axis M.
 
     ``weights`` of shape (M,) produces one aggregate tree;  shape (K, M)
@@ -176,16 +199,19 @@ def stacked_weighted(stacked, weights, mesh=None, axis_name: str = "clients"):
     cohort path's "aggregate every client's tip selection at once", where
     row k holds client k's (normalised) weights over the M stacked models.
 
-    With a ``mesh``, the M axis is sharded over ``axis_name``: each device
-    einsums its local models against its weight columns and one ``psum``
-    assembles the (K, ...) aggregates (M zero-padded to a mesh-size
-    multiple with zero weights — identical math).
+    With a ``mesh``, the M axis is sharded over ``axis_name`` (joined by
+    ``data_axis`` on a 2-D cohort mesh): each device einsums its local
+    models against its weight columns and one ``psum`` assembles the
+    (K, ...) aggregates (M zero-padded to a mesh-size multiple with zero
+    weights — identical math).
     """
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
     batched = w.ndim == 2
 
-    n = _mesh_axis_size(mesh, axis_name)
+    axes = _reduce_axes(mesh, axis_name, data_axis) if mesh is not None \
+        else (axis_name,)
+    n = int(np.prod([_mesh_axis_size(mesh, a) for a in axes]))
     if n > 1:
         leaves, treedef = jax.tree_util.tree_flatten(stacked)
         m = int(leaves[0].shape[0])
@@ -199,7 +225,7 @@ def stacked_weighted(stacked, weights, mesh=None, axis_name: str = "clients"):
         is_f = [jnp.issubdtype(l.dtype, jnp.floating) for l in leaves]
         floats = [pad_leading(l.astype(jnp.float32), target)
                   for l, f in zip(leaves, is_f) if f]
-        red = iter(_psum_reducer(mesh, axis_name, "wsum")(floats, w2)
+        red = iter(_psum_reducer(mesh, axes, "wsum")(floats, w2)
                    if floats else [])
 
         def pick(l, f):

@@ -67,18 +67,25 @@ class DagAflConfig:
     # time falls before the window flushes is clamped to the flush time
     cohort_window: float = 1.0
     # SPMD cohort execution: "auto" builds a clients-axis mesh clamped to
-    # this host's devices (1 device => exact single-device path), None
-    # forces single-device, or pass a jax.sharding.Mesh carrying
-    # ``clients_axis`` (extra data/model axes compose — they are simply
-    # replicated over by the cohort programs)
+    # this host's devices (1 device => exact single-device path), "CxD"
+    # (e.g. "4x2") or a (clients, data) tuple — clients may be "auto" —
+    # builds the 2-D (clients, data) mesh that additionally shards each
+    # client group's training data, None forces single-device, or pass a
+    # jax.sharding.Mesh carrying ``clients_axis`` (extra axes compose)
     mesh: object = "auto"
     clients_axis: str = "clients"
+    data_axis: str = "data"
+    # overlapped host pipeline: prefetch each window's batch assembly on a
+    # background thread while the device computes (False = inline assembly,
+    # bit-identical results — the toggle exists for benchmarking/debugging)
+    overlap: bool = True
 
 
-def resolve_cohort_mesh(mesh, cohort_size: int, clients_axis: str = "clients"):
+def resolve_cohort_mesh(mesh, cohort_size: int, clients_axis: str = "clients",
+                        data_axis: str = "data"):
     """Back-compat alias for :func:`repro.fl.cohort.resolve_cohort_mesh`."""
     from repro.fl.cohort import resolve_cohort_mesh as _resolve
-    return _resolve(mesh, cohort_size, clients_axis)
+    return _resolve(mesh, cohort_size, clients_axis, data_axis)
 
 
 class DagAflCoordinator:
@@ -127,7 +134,8 @@ class DagAflCoordinator:
                 self.cohort = build_cohort_engine(
                     backend, shards, cohort_size=cfg.cohort_size,
                     mesh=cfg.mesh, clients_axis=cfg.clients_axis,
-                    epochs=cfg.local_epochs)
+                    data_axis=cfg.data_axis, epochs=cfg.local_epochs,
+                    overlap=cfg.overlap)
             if self.cohort is not None:
                 self._window = CohortWindow(
                     self.loop, cfg.cohort_size, cfg.cohort_window,
@@ -303,6 +311,15 @@ class DagAflCoordinator:
             self._dispatch_one(rounds[0])
             return
 
+        # the window's membership and seeds are now fixed, so its batch
+        # assembly (per-client np RNG sampling + stack/pad + device_put)
+        # can start on the assembler's background thread and overlap the
+        # device work below — tip-model stacking and the Eq. 6 collective
+        train_sets = [self.client_data[rd["client"]]["train"] for rd in rounds]
+        seeds = [rd["seed"] for rd in rounds]
+        self.cohort.prefetch_window(train_sets, seeds,
+                                    epochs=cfgc.local_epochs)
+
         # Eq. 6 for the whole cohort as ONE stacked reduction: stack the
         # union of selected models once, then a (K, M) weight matrix row per
         # client (uniform over its own selection, zero elsewhere)
@@ -313,19 +330,19 @@ class DagAflCoordinator:
             for r in rd["refs"]:
                 weights[k, ref_pos[r]] = 1.0
         # under a mesh this is the window's cross-device collective: the M
-        # stacked tip models shard over the clients axis and one psum-einsum
-        # yields every client's Eq. 6 aggregate (see core/aggregate.py)
+        # stacked tip models spread over the mesh (BOTH axes of a 2-D one)
+        # and one psum-einsum yields every client's Eq. 6 aggregate (see
+        # core/aggregate.py)
         stacked_tips = tree_stack([self.store.get(r) for r in uniq])
         agg_stacked = stacked_weighted(stacked_tips, weights,
                                        mesh=self.cohort.mesh,
-                                       axis_name=self.cohort.clients_axis)
+                                       axis_name=self.cohort.clients_axis,
+                                       data_axis=self.cohort.data_axis)
 
         # batched local training + validation + signature extraction
-        train_sets = [self.client_data[rd["client"]]["train"] for rd in rounds]
         val_sets = [self.client_data[rd["client"]]["val"] for rd in rounds]
         new_stacked, _ = self.cohort.train_cohort_stacked(
-            agg_stacked, train_sets, [rd["seed"] for rd in rounds],
-            epochs=cfgc.local_epochs)
+            agg_stacked, train_sets, seeds, epochs=cfgc.local_epochs)
         val_accs = self.cohort.evaluate_cohort_stacked(new_stacked, val_sets)
         sigs = self.cohort.signature_cohort_stacked(new_stacked, train_sets)
         new_models = tree_unstack(new_stacked)

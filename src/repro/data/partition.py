@@ -20,7 +20,14 @@ def partition_iid(ds: Dataset, n_clients: int, seed: int = 0) -> List[Dataset]:
 
 def partition_dirichlet(ds: Dataset, n_clients: int, beta: float,
                         seed: int = 0, min_per_client: int = 8) -> List[Dataset]:
-    """Label-Dirichlet partition: p(class c on client k) ~ Dir(beta)."""
+    """Label-Dirichlet partition: p(class c on client k) ~ Dir(beta).
+
+    Clients below ``min_per_client`` rows are topped up by sampling the
+    missing rows WITHOUT replacement from the global pool, excluding rows
+    the client already owns — so a client never holds duplicate rows.
+    Overlap semantics: topped-up rows may still be owned by OTHER clients
+    (cross-client sharing is inherent to a top-up from a fixed pool); the
+    Dirichlet split itself remains disjoint across clients."""
     rng = np.random.default_rng(seed)
     n_classes = int(ds.y.max()) + 1
     client_idx: List[List[int]] = [[] for _ in range(n_clients)]
@@ -31,10 +38,14 @@ def partition_dirichlet(ds: Dataset, n_clients: int, beta: float,
         cuts = (np.cumsum(props) * len(idx_c)).astype(int)[:-1]
         for k, part in enumerate(np.split(idx_c, cuts)):
             client_idx[k].extend(part.tolist())
-    # ensure no client is empty (tiny random top-up)
+    # ensure no client is starved (tiny random top-up, duplicate-free)
     for k in range(n_clients):
-        if len(client_idx[k]) < min_per_client:
-            extra = rng.integers(0, len(ds), min_per_client - len(client_idx[k]))
+        missing = min_per_client - len(client_idx[k])
+        if missing > 0:
+            pool = np.setdiff1d(np.arange(len(ds)),
+                                np.asarray(client_idx[k], dtype=int))
+            extra = rng.choice(pool, size=min(missing, len(pool)),
+                               replace=False)
             client_idx[k].extend(extra.tolist())
     out = []
     for k in range(n_clients):

@@ -46,9 +46,13 @@ class FLConfig:
     # into one vmapped program (1 = sequential reference path)
     cohort_size: int = 1
     cohort_window: float = 1.0
-    # SPMD cohort execution (see DagAflConfig.mesh): "auto" | None | Mesh
+    # SPMD cohort execution (see DagAflConfig.mesh):
+    # "auto" | "CxD" | (clients, data) | None | Mesh
     mesh: object = "auto"
     clients_axis: str = "clients"
+    data_axis: str = "data"
+    # overlapped host pipeline (see DagAflConfig.overlap)
+    overlap: bool = True
     # algorithm-specific knobs
     fedasync_alpha: float = 0.6
     fedasync_staleness: str = "poly"     # poly | constant
@@ -81,7 +85,8 @@ class _Harness:
                 backend,
                 [client_data[c]["train"] for c in range(cfg.n_clients)],
                 cohort_size=cfg.cohort_size, mesh=cfg.mesh,
-                clients_axis=cfg.clients_axis, epochs=cfg.local_epochs)
+                clients_axis=cfg.clients_axis, data_axis=cfg.data_axis,
+                epochs=cfg.local_epochs, overlap=cfg.overlap)
         self._val_sets = [client_data[c]["val"]
                           for c in range(cfg.n_clients)]
 
@@ -429,7 +434,8 @@ def run_dagfl(backend, client_data, global_test, cfg: FLConfig,
         patience=cfg.patience, heterogeneity=cfg.heterogeneity, seed=cfg.seed,
         verify_paths=False, cohort_size=cfg.cohort_size,
         cohort_window=cfg.cohort_window, mesh=cfg.mesh,
-        clients_axis=cfg.clients_axis,
+        clients_axis=cfg.clients_axis, data_axis=cfg.data_axis,
+        overlap=cfg.overlap,
         tip=TipSelectionConfig(n_select=cfg.dagfl_n_select, lam=0.0,
                                use_freshness=False, use_similarity=False,
                                p_similar=max(cfg.n_clients, 8)))
@@ -451,6 +457,7 @@ def run_dagafl(backend, client_data, global_test, cfg: FLConfig,
         patience=cfg.patience, heterogeneity=cfg.heterogeneity, seed=cfg.seed,
         cohort_size=cfg.cohort_size, cohort_window=cfg.cohort_window,
         mesh=cfg.mesh, clients_axis=cfg.clients_axis,
+        data_axis=cfg.data_axis, overlap=cfg.overlap,
         tip=tip_cfg or TipSelectionConfig())
     coord = DagAflCoordinator(backend, client_data, global_test, dcfg,
                               cost, profiles)

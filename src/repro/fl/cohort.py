@@ -56,10 +56,29 @@ the cross-device work is the window's Eq. 6 aggregation, which
 Cohort padding rounds up to a mesh-size multiple so the groups divide
 evenly; masking keeps the padding out of every result exactly as on one
 device.  ``mesh=None`` (or a 1-device mesh) is bit-for-bit today's
-single-device path.  Extra mesh axes (``data``/``model`` from
-``repro.launch.mesh``) compose: these programs only consume ``clients_axis``
-and replicate over the rest.  This works identically for both program
-suites — the mesh plumbing never inspects what the programs compute.
+single-device path.
+
+2-D (clients, data) meshes (``make_cohort_mesh(C, data=D)``) additionally
+shard each client group's TRAINING DATA: the per-step batch axis (and the
+eval/signature sample axes) splits over the ``data`` axis, every device
+computes the sum-form loss/metric terms on its local sample slice, and one
+``lax.psum`` over ``data`` re-assembles the full-batch gradient (and the
+masked eval/signature means) inside each client group — the client models
+stay replicated within a group and advance in lockstep, so the 2-D result
+matches the 1-D clients-mesh result up to float-reduction order (property-
+tested).  Ragged batch/sample axes pad to a ``data`` multiple with
+zero-weight rows (``bm`` masks), so non-divisible batch sizes cost padding
+FLOPs but never numerics.  The suites expose their losses/metrics in
+sum-and-count form (``sum_loss``/``eval_terms``) exactly so the engine can
+place the division AFTER the psum.
+
+Host-side window assembly lives in
+:class:`repro.data.pipeline.WindowAssembler`: a double-buffered background
+stage that samples, stacks, pads and ``device_put``s a window while the
+device computes (``prefetch_window``/``take``), preserving the sequential
+per-seed np RNG streams exactly.  This all works identically for both
+program suites — the mesh plumbing never inspects what the programs
+compute.
 """
 from __future__ import annotations
 
@@ -126,8 +145,17 @@ class CohortPrograms:
 
     traced (called inside the engine's jitted programs):
       * ``loss(params, x, y)``            scalar training loss on one batch
-      * ``masked_eval(params, xs, ys, ms)``  masked accuracy on one shard
-      * ``eval_shared(params, x, y, mask)``  ONE model on K stacked shards
+      * ``sum_loss(params, x, y, w, denom)``  sum-form loss: row-weighted
+        loss sum over ``denom`` (the GLOBAL weighted count in this suite's
+        loss units), so a psum over a data mesh axis reconstructs ``loss``
+        on the full batch; must equal ``loss`` when ``w`` is all-ones and
+        ``denom`` the local count
+      * ``loss_denom(w, y)``              local count in loss units for a
+        row-weight vector ``w`` (samples for CNN, tokens for LM)
+      * ``eval_terms(params, xs, ys, ms)``   (num, den) masked-accuracy
+        terms on one shard; ``masked_eval`` = num / max(den, 1)
+      * ``eval_shared_terms(params, x, y, mask)``  (num (K,), den (K,))
+        terms for ONE model on K stacked shards
       * ``sample_signature(params, xs)``  per-sample Eq. 3 signature rows,
         so the engine can take a padding-masked mean
 
@@ -165,11 +193,28 @@ class CohortPrograms:
     def loss(self, params, x, y):
         raise NotImplementedError
 
-    def masked_eval(self, params, xs, ys, ms):
+    def sum_loss(self, params, x, y, w, denom):
         raise NotImplementedError
 
-    def eval_shared(self, params, x, y, mask):
+    def loss_denom(self, w, y):
         raise NotImplementedError
+
+    def eval_terms(self, params, xs, ys, ms):
+        raise NotImplementedError
+
+    def eval_shared_terms(self, params, x, y, mask):
+        raise NotImplementedError
+
+    def masked_eval(self, params, xs, ys, ms):
+        """Masked accuracy on one shard — the division placed after the
+        suite's sum-form terms (same math the 2-D data-mesh path psums)."""
+        num, den = self.eval_terms(params, xs, ys, ms)
+        return num / jnp.maximum(den, 1.0)
+
+    def eval_shared(self, params, x, y, mask):
+        """ONE model on K stacked shards, via the sum-form terms."""
+        num, den = self.eval_shared_terms(params, x, y, mask)
+        return num / jnp.maximum(den, 1.0)
 
     def sample_signature(self, params, xs):
         raise NotImplementedError
@@ -219,23 +264,35 @@ class CNNCohortPrograms(CohortPrograms):
         p = params["fcs"][-1]
         return x @ p["w"] + p["b"]
 
-    def loss(self, params, x, y):
+    def _sample_losses(self, params, x, y):
+        """(B,) per-sample cross-entropy in matmul form."""
         logits = self._forward(params, x)
         logz = jax.scipy.special.logsumexp(logits, axis=-1)
         ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
-        return jnp.mean(logz - ll)
+        return logz - ll
 
-    def masked_eval(self, params, xs, ys, ms):
-        """Masked #correct on one shard, conv-form forward: eval is
+    def loss(self, params, x, y):
+        return jnp.mean(self._sample_losses(params, x, y))
+
+    def sum_loss(self, params, x, y, w, denom):
+        """Row-weighted loss sum over the GLOBAL sample count: psum over a
+        data mesh axis reconstructs the full-batch ``loss`` exactly."""
+        return jnp.sum(self._sample_losses(params, x, y) * w) / denom
+
+    def loss_denom(self, w, y):
+        return jnp.sum(w)
+
+    def eval_terms(self, params, xs, ys, ms):
+        """Masked #correct terms on one shard, conv-form forward: eval is
         FLOP-light and per-client weights make a vmapped conv lower to
         XLA:CPU's slow grouped path, so dense-conv + dispatch fusion wins
         over arithmetic batching here."""
         from repro.models import cnn as cnn_mod
         logits, _ = cnn_mod.cnn_forward(params, xs, self.cfg)
         correct = (jnp.argmax(logits, -1) == ys).astype(jnp.float32)
-        return jnp.sum(correct * ms) / jnp.maximum(jnp.sum(ms), 1.0)
+        return jnp.sum(correct * ms), jnp.sum(ms)
 
-    def eval_shared(self, params, x, y, mask):
+    def eval_shared_terms(self, params, x, y, mask):
         """ONE model on K padded shards (publisher's convergence monitor).
         The params carry no cohort axis, so the K shards simply fold into
         the batch dimension of the conv-form forward — true batching."""
@@ -245,8 +302,7 @@ class CNNCohortPrograms(CohortPrograms):
         logits, _ = cnn_mod.cnn_forward(params, flat, self.cfg)
         correct = (jnp.argmax(logits.reshape(k, n, -1), -1) == y)
         correct = correct.astype(jnp.float32) * mask
-        return jnp.sum(correct, axis=1) / jnp.maximum(jnp.sum(mask, axis=1),
-                                                      1.0)
+        return jnp.sum(correct, axis=1), jnp.sum(mask, axis=1)
 
     def sample_signature(self, params, x):
         """Per-sample Eq. 3 zero fractions, conv-form, EARLY EXIT: only the
@@ -341,6 +397,20 @@ class LMCohortPrograms(CohortPrograms):
         batch = {"tokens": x[:, :-1], "labels": y}
         return tfm.loss_fn(params, batch, self.cfg, self.train_runtime)[0]
 
+    def sum_loss(self, params, x, y, w, denom):
+        """Row-weighted token-CE sum over the GLOBAL token count ``denom``
+        (+ the MoE aux weighted by the local token fraction, so dense
+        models — aux 0 — psum to exactly the full-batch ``loss`` and MoE
+        models psum to the count-weighted mean of per-shard auxes)."""
+        from repro.models import transformer as tfm
+        m = jnp.broadcast_to(w[:, None], y.shape).astype(jnp.float32)
+        batch = {"tokens": x[:, :-1], "labels": y, "mask": m}
+        total, _ = tfm.loss_fn(params, batch, self.cfg, self.train_runtime)
+        return total * jnp.sum(m) / denom
+
+    def loss_denom(self, w, y):
+        return jnp.sum(w) * y.shape[-1]
+
     def _row_correct(self, params, xs, ys):
         """(N, S) correctness grid for a padded token shard."""
         from repro.models import transformer as tfm
@@ -348,14 +418,14 @@ class LMCohortPrograms(CohortPrograms):
                                    self.runtime, mode="prefill")
         return (jnp.argmax(logits, -1) == ys).astype(jnp.float32)
 
-    def masked_eval(self, params, xs, ys, ms):
-        """Per-row next-token accuracy, padding-masked over rows.  Rows all
-        carry ``seq_len`` real positions, so the masked mean of row means
-        equals the sequential path's grand mean."""
+    def eval_terms(self, params, xs, ys, ms):
+        """Per-row next-token accuracy terms, padding-masked over rows.
+        Rows all carry ``seq_len`` real positions, so the masked mean of
+        row means equals the sequential path's grand mean."""
         per_row = jnp.mean(self._row_correct(params, xs, ys), axis=-1)
-        return jnp.sum(per_row * ms) / jnp.maximum(jnp.sum(ms), 1.0)
+        return jnp.sum(per_row * ms), jnp.sum(ms)
 
-    def eval_shared(self, params, x, y, mask):
+    def eval_shared_terms(self, params, x, y, mask):
         """ONE model on K stacked token shards: fold K into the batch dim —
         true batching, same as the CNN suite."""
         k, n = x.shape[0], x.shape[1]
@@ -363,8 +433,7 @@ class LMCohortPrograms(CohortPrograms):
         correct = self._row_correct(params, flat, y.reshape((k * n,) +
                                                             y.shape[2:]))
         per_row = jnp.mean(correct, axis=-1).reshape(k, n) * mask
-        return jnp.sum(per_row, axis=1) / jnp.maximum(jnp.sum(mask, axis=1),
-                                                      1.0)
+        return jnp.sum(per_row, axis=1), jnp.sum(mask, axis=1)
 
     def sample_signature(self, params, xs):
         """(N, sig_dims) Eq. 3 rows from the designated signature layer."""
@@ -439,8 +508,8 @@ class CohortBackend:
 
     def __init__(self, backend, capacity: Optional[int] = None,
                  eval_pad_quantum: int = 64, mesh=None,
-                 clients_axis: str = "clients",
-                 eval_cache_entries: int = 64):
+                 clients_axis: str = "clients", data_axis: str = "data",
+                 eval_cache_entries: int = 64, overlap: bool = True):
         programs_cls = _programs_for(backend)
         if programs_cls is None:
             raise TypeError(
@@ -455,24 +524,28 @@ class CohortBackend:
         self.eval_pad_quantum = eval_pad_quantum
         self.cfg = backend.cfg
         self.opt = backend.opt
-        self._pad_T = 0            # monotone step-axis pad target
         # LRU over padded eval/signature buffers: a long-running simulator
         # sweeps many shards; the cap bounds pinned device memory
         self._eval_data_cache: "OrderedDict" = OrderedDict()
         self.eval_cache_entries = max(int(eval_cache_entries), 1)
-        # a 1-device (or absent) clients axis degrades to the exact
-        # single-device programs — same jit cache, same numerics
+        # a 1x1 (or absent) mesh degrades to the exact single-device
+        # programs — same jit cache, same numerics
         self.clients_axis = clients_axis
+        self.data_axis = data_axis
         self.mesh = None
+        self._n_data = 1
+        n_clients_axis = 1
         if mesh is not None:
             if clients_axis not in mesh.shape:
                 raise ValueError(
                     f"mesh axes {tuple(mesh.axis_names)} carry no "
                     f"{clients_axis!r} axis")
-            if int(dict(mesh.shape)[clients_axis]) > 1:
+            n_clients_axis = int(dict(mesh.shape)[clients_axis])
+            n_data = int(dict(mesh.shape).get(data_axis, 1))
+            if n_clients_axis > 1 or n_data > 1:
                 self.mesh = mesh
-        self._n_shards = (int(dict(self.mesh.shape)[clients_axis])
-                          if self.mesh is not None else 1)
+                self._n_data = n_data
+        self._n_shards = n_clients_axis if self.mesh is not None else 1
         if self.mesh is None:
             self._train_jit = jax.jit(self._train_impl)
             self._train_uniform_jit = jax.jit(self._train_uniform_impl)
@@ -485,25 +558,76 @@ class CohortBackend:
             from jax.sharding import PartitionSpec
             c, r = PartitionSpec(clients_axis), PartitionSpec()
 
-            def spmd(fn, in_specs, out_specs):
-                """Client-axis SPMD: each device runs ``fn`` on its local
-                client group; there are no collectives inside — aggregation
-                happens in ``repro.core.aggregate``'s psum programs."""
+            def spmd(fn, in_specs, out_specs, check_rep=True):
+                """Cohort SPMD: each device runs ``fn`` on its local client
+                group (and, on a 2-D mesh, its local sample slice).  On the
+                1-D mesh there are no collectives inside — aggregation
+                happens in ``repro.core.aggregate``'s psum programs; the
+                2-D programs psum their sum-form loss/metric terms over the
+                data axis themselves."""
                 return jax.jit(shard_map(fn, mesh=self.mesh,
                                          in_specs=in_specs,
-                                         out_specs=out_specs))
+                                         out_specs=out_specs,
+                                         check_rep=check_rep))
 
-            self._train_jit = spmd(self._train_impl, (c, c, c, c), (c, c))
-            self._train_uniform_jit = spmd(self._train_uniform_impl,
-                                           (c, c, c), (c, c))
-            self._eval_jit = spmd(self._eval_impl, (c, c, c, c), c)
-            # shared model replicated, K val shards sharded over clients
-            self._eval_shared_jit = spmd(self._eval_shared_impl,
-                                         (r, c, c, c), c)
-            # M candidate models sharded, the one val shard replicated
-            self._eval_many_jit = spmd(self._eval_many_impl,
-                                       (c, r, r, r), c)
-            self._sig_jit = spmd(self._sig_impl, (c, c, c), c)
+            if self._n_data <= 1:
+                self._train_jit = spmd(self._train_impl, (c, c, c, c), (c, c))
+                self._train_uniform_jit = spmd(self._train_uniform_impl,
+                                               (c, c, c), (c, c))
+                self._eval_jit = spmd(self._eval_impl, (c, c, c, c), c)
+                # shared model replicated, K val shards sharded over clients
+                self._eval_shared_jit = spmd(self._eval_shared_impl,
+                                             (r, c, c, c), c)
+                # M candidate models sharded, the one val shard replicated
+                self._eval_many_jit = spmd(self._eval_many_impl,
+                                           (c, r, r, r), c)
+                self._sig_jit = spmd(self._sig_impl, (c, c, c), c)
+            else:
+                # 2-D (clients, data): batch arrays split their sample dim
+                # over `data` (dim 2 for train (K, T, B, ...), dim 1 for
+                # eval (K, N, ...)); params replicate within a client group
+                # and the programs psum their sum-form terms over `data`.
+                # check_rep is off: the rep-tracking rules in this jax do
+                # not cover remat/scan composition, and the psum-restored
+                # replication of params is pinned by the equivalence tests.
+                d = data_axis
+                cb = PartitionSpec(clients_axis, None, d)
+                ce = PartitionSpec(clients_axis, d)
+                dv = PartitionSpec(d)
+                self._train_jit = spmd(self._train2d_impl,
+                                       (c, cb, cb, dv, c), (c, c),
+                                       check_rep=False)
+                self._train_uniform_jit = spmd(self._train2d_uniform_impl,
+                                               (c, cb, cb, dv), (c, c),
+                                               check_rep=False)
+                self._eval_jit = spmd(self._eval2d_impl, (c, ce, ce, ce), c,
+                                      check_rep=False)
+                self._eval_shared_jit = spmd(self._eval2d_shared_impl,
+                                             (r, ce, ce, ce), c,
+                                             check_rep=False)
+                # M models over clients, the ONE shard's samples over data
+                self._eval_many_jit = spmd(self._eval2d_many_impl,
+                                           (c, dv, dv, dv), c,
+                                           check_rep=False)
+                self._sig_jit = spmd(self._sig2d_impl, (c, ce, ce), c,
+                                     check_rep=False)
+        # host-side window assembly: double-buffered background pipeline
+        # (prefetch_window/take) or inline when overlap is off
+        from repro.data.pipeline import WindowAssembler
+        shardings = None
+        if self.mesh is not None:
+            from repro.sharding.rules import (cohort_batch_sharding,
+                                              data_shard_sharding)
+            d_ax = data_axis if self._n_data > 1 else None
+            shardings = {
+                "batch": cohort_batch_sharding(self.mesh, clients_axis,
+                                               d_ax, 2 if d_ax else None),
+                "mask": cohort_batch_sharding(self.mesh, clients_axis),
+                "bm": (data_shard_sharding(self.mesh, data_axis)
+                       if d_ax else None),
+            }
+        self.assembler = WindowAssembler(self.programs, n_data=self._n_data,
+                                         shardings=shardings, overlap=overlap)
 
     @staticmethod
     def supports(backend) -> bool:
@@ -522,9 +646,12 @@ class CohortBackend:
         final global-test sweep — permanently inflate every small-val-set
         dispatch.)"""
         epochs = epochs or self.programs.default_epochs
-        for ds in train_shards:
-            self._pad_T = max(self._pad_T, self.programs.train_steps(ds,
-                                                                     epochs))
+        self.assembler.register_shards(train_shards, epochs)
+
+    @property
+    def _pad_T(self) -> int:
+        """Monotone step-axis pad target (owned by the window assembler)."""
+        return self.assembler.pad_T
 
     def _round_chunk(self, n: int) -> int:
         """Pad target for a sample axis: next power of two below the
@@ -630,40 +757,168 @@ class CohortBackend:
             return jax.vmap(one)(stacked_params, x, mask)
         return jax.lax.map(lambda args: one(*args), (stacked_params, x, mask))
 
+    # -- 2-D (clients, data) programs: sample dims sharded over `data`,
+    # sum-form terms psum'd back so every device in a client group sees the
+    # full-batch gradient / metric — the models stay in lockstep ------------
+
+    def _train2d_impl(self, stacked_params, xb, yb, bm, mask):
+        """xb (K, T, B_local, ...); bm (B_local,) batch-row weights; mask
+        (K, T) step mask.  Per step: grads of the sum-form loss on the
+        local sample slice, one psum over `data` per (grads, loss) — the
+        full-batch SGD step, computed D ways."""
+        ax = self.data_axis
+        denom = jax.lax.psum(self.programs.loss_denom(bm, yb[0, 0]), ax)
+
+        def one_client(params, xs, ys, ms):
+            opt_state = self.opt.init(params)
+
+            def step(carry, batch):
+                params, opt_state = carry
+                x, y, m = batch
+                loss, grads = jax.value_and_grad(
+                    lambda p: self.programs.sum_loss(p, x, y, bm, denom))(
+                    params)
+                loss = jax.lax.psum(loss, ax)
+                grads = jax.lax.psum(grads, ax)
+                updates, new_opt = self.opt.update(grads, opt_state, params)
+                new_params = apply_updates(params, updates)
+                params = _tree_select(m, new_params, params)
+                opt_state = _tree_select(m, new_opt, opt_state)
+                return (params, opt_state), jnp.where(m, loss, 0.0)
+
+            (params, _), losses = jax.lax.scan(
+                step, (params, opt_state), (xs, ys, ms))
+            return params, losses
+
+        return jax.vmap(one_client)(stacked_params, xb, yb, mask)
+
+    def _train2d_uniform_impl(self, stacked_params, xb, yb, bm):
+        """Mask-free data-sharded variant (see ``_train_uniform_impl``)."""
+        ax = self.data_axis
+        denom = jax.lax.psum(self.programs.loss_denom(bm, yb[0, 0]), ax)
+
+        def one_client(params, xs, ys):
+            opt_state = self.opt.init(params)
+
+            def step(carry, batch):
+                params, opt_state = carry
+                x, y = batch
+                loss, grads = jax.value_and_grad(
+                    lambda p: self.programs.sum_loss(p, x, y, bm, denom))(
+                    params)
+                loss = jax.lax.psum(loss, ax)
+                grads = jax.lax.psum(grads, ax)
+                updates, opt_state = self.opt.update(grads, opt_state, params)
+                return (apply_updates(params, updates), opt_state), loss
+
+            (params, _), losses = jax.lax.scan(
+                step, (params, opt_state), (xs, ys))
+            return params, losses
+
+        return jax.vmap(one_client)(stacked_params, xb, yb)
+
+    def _eval2d_terms(self, fn, args):
+        """Fused per-client terms + one psum pair over `data`."""
+        if self.programs.vmap_eval:
+            num, den = jax.vmap(fn)(*args)
+        else:
+            num, den = jax.lax.map(lambda a: fn(*a), args)
+        num = jax.lax.psum(num, self.data_axis)
+        den = jax.lax.psum(den, self.data_axis)
+        return num / jnp.maximum(den, 1.0)
+
+    def _eval2d_impl(self, stacked_params, x, y, mask):
+        """K models on K shards, samples sharded over `data`: local terms,
+        psum, divide — the masked mean over each client's FULL shard."""
+        return self._eval2d_terms(self.programs.eval_terms,
+                                  (stacked_params, x, y, mask))
+
+    def _eval2d_shared_impl(self, params, x, y, mask):
+        num, den = self.programs.eval_shared_terms(params, x, y, mask)
+        num = jax.lax.psum(num, self.data_axis)
+        den = jax.lax.psum(den, self.data_axis)
+        return num / jnp.maximum(den, 1.0)
+
+    def _eval2d_many_impl(self, stacked_params, x, y, mask):
+        """M models over `clients`, the ONE shard's samples over `data`."""
+
+        def one(p):
+            return self.programs.eval_terms(p, x, y, mask)
+
+        if self.programs.vmap_eval:
+            num, den = jax.vmap(one)(stacked_params)
+        else:
+            num, den = jax.lax.map(one, stacked_params)
+        num = jax.lax.psum(num, self.data_axis)
+        den = jax.lax.psum(den, self.data_axis)
+        return num / jnp.maximum(den, 1.0)
+
+    def _sig2d_impl(self, stacked_params, x, mask):
+        """Masked signatures with samples sharded over `data`."""
+        ax = self.data_axis
+
+        def one(params, xs, ms):
+            zf = self.programs.sample_signature(params, xs)
+            w = ms[:, None]
+            return jnp.sum(zf * w, axis=0), jnp.sum(w)
+
+        if self.programs.vmap_eval:
+            num, den = jax.vmap(one)(stacked_params, x, mask)
+        else:
+            num, den = jax.lax.map(lambda a: one(*a),
+                                   (stacked_params, x, mask))
+        num = jax.lax.psum(num, ax)
+        den = jax.lax.psum(den, ax)
+        return num / jnp.maximum(den[:, None], 1.0)
+
     # -- host-side batch assembly -------------------------------------------
+    # (window sampling/stacking/padding/device_put lives in
+    # repro.data.pipeline.WindowAssembler so it can run double-buffered on
+    # a background thread; the engine owns only the pad-target policy)
 
-    def _prepare_train(self, datasets: Sequence, seeds: Sequence[int],
-                       epochs: int):
-        """Per-client batch assembly via the programs suite (same np RNG
-        stream per seed as the sequential path), then pad the step axis."""
-        xs_all, ys_all, steps = [], [], []
-        for ds, seed in zip(datasets, seeds):
-            xb, yb = self.programs.client_batches(ds, seed, epochs)
-            xs_all.append(xb)
-            ys_all.append(yb)
-            steps.append(int(xb.shape[0]))
-
-        self._pad_T = max(self._pad_T, *steps)
-        T = self._pad_T
-        xb = jnp.stack([pad_leading(x, T) for x in xs_all])
-        yb = jnp.stack([pad_leading(y, T) for y in ys_all])
-        mask = jnp.stack([
-            jnp.arange(T) < s for s in jnp.asarray(steps)]).astype(jnp.float32)
-        return xb, yb, mask, steps
-
-    def _pad_cohort(self, stacked, xb, yb, mask):
-        """Pad the cohort axis to the next power of two (capped at
-        ``capacity``) with fully-masked repeats: short cohorts waste at most
-        2x compute while the jit cache stays bounded at log2(capacity)
-        programs per shape family.  Under a mesh the target additionally
-        rounds up to a multiple of the clients-axis size, so the shard_map
-        groups divide evenly for any ragged cohort."""
-        k = int(mask.shape[0])
+    def _cohort_target(self, k: int) -> int:
+        """Cohort-axis pad target: next power of two (capped at
+        ``capacity``) so short cohorts waste at most 2x compute while the
+        jit cache stays bounded at log2(capacity) programs per shape
+        family; under a mesh it additionally rounds up to a multiple of the
+        clients-axis size, so the shard_map groups divide evenly for any
+        ragged cohort."""
         target = next_pow2(k)
         if self.capacity is not None:
             target = min(max(target, 1), max(self.capacity, k))
         if self._n_shards > 1:
             target = round_up_multiple(target, self._n_shards)
+        return max(target, k)
+
+    def _pad_params(self, stacked, k: int, target: int):
+        """Pad a stacked K-client pytree's client axis with repeats of the
+        last client (fully masked / discarded downstream)."""
+        if k >= target:
+            return stacked
+        reps = target - k
+        return jax.tree_util.tree_map(
+            lambda leaf: jnp.concatenate(
+                [leaf, jnp.repeat(leaf[-1:], reps, axis=0)]), stacked)
+
+    def prefetch_window(self, datasets: Sequence, seeds: Sequence[int],
+                        epochs: Optional[int] = None) -> None:
+        """Start assembling the given window's training batch on the
+        assembler's background thread (sampling, stacking, padding,
+        ``device_put``) so it overlaps whatever the device is running —
+        the previous window, the Eq. 6 aggregation, tip validation.  The
+        matching ``train_cohort_stacked`` call collects it; a mismatched or
+        absent prefetch silently assembles inline (identical numerics — the
+        per-seed np RNG streams don't depend on where sampling runs)."""
+        epochs = epochs or self.programs.default_epochs
+        self.assembler.prefetch(datasets, seeds, epochs,
+                                self._cohort_target(len(datasets)))
+
+    def _pad_cohort(self, stacked, xb, yb, mask):
+        """Pad the cohort axis (see ``_cohort_target``) with fully-masked
+        repeats — the eval/signature-path twin of the assembler's
+        client-axis padding."""
+        k = int(mask.shape[0])
+        target = self._cohort_target(k)
         if k >= target:
             return stacked, xb, yb, mask, k
         reps = target - k
@@ -709,6 +964,10 @@ class CohortBackend:
         while len(self._eval_data_cache) > cap:
             self._eval_data_cache.popitem(last=False)
         target = max(self._round_chunk(n) for n in ns)
+        if self._n_data > 1:
+            # sample axes shard over the data mesh axis: pad to a multiple
+            # (masked rows, so the extra padding never enters a mean)
+            target = round_up_multiple(target, self._n_data)
         x = jnp.stack([pad_leading(s[1], target) for s in singles])
         y = jnp.stack([pad_leading(s[2], target) for s in singles])
         mask = jnp.stack([pad_leading(s[3], target) for s in singles])
@@ -724,34 +983,39 @@ class CohortBackend:
         (see ``CohortPrograms.summarize_losses``).
         """
         epochs = epochs or self.programs.default_epochs
-        xb, yb, mask, steps = self._prepare_train(datasets, seeds, epochs)
+        k = len(datasets)
+        target = self._cohort_target(k)
+        # collect the prefetched window (or assemble inline): batches are
+        # already stacked, padded (steps / cohort / data-multiple batch
+        # rows) and — under a mesh — device_put with the final layout, so
+        # every host->mesh transfer happens once instead of bouncing
+        # through device 0
+        win = self.assembler.take(datasets, seeds, epochs, target)
+        stacked_params = self._pad_params(stacked_params, k, target)
+        if self.mesh is not None:
+            from repro.sharding.rules import stacked_client_shardings
+            stacked_params = jax.device_put(
+                stacked_params, stacked_client_shardings(
+                    stacked_params, self.mesh, self.clients_axis,
+                    data_axis=self.data_axis if self._n_data > 1 else None))
         # mask-free fast path when no step padding exists: every client
         # (and therefore every cohort-padding repeat) runs exactly _pad_T
         # steps, so the masked and uniform programs are the same math
-        uniform = all(s == self._pad_T for s in steps)
-        stacked_params, xb, yb, mask, k = self._pad_cohort(
-            stacked_params, xb, yb, mask)
-        if self.mesh is not None:
-            # place params AND batch arrays client-sharded BEFORE entering
-            # jit, so every host->mesh transfer happens once with the final
-            # layout instead of bouncing through device 0
-            from repro.sharding.rules import (cohort_batch_sharding,
-                                              stacked_client_shardings)
-            stacked_params = jax.device_put(
-                stacked_params, stacked_client_shardings(
-                    stacked_params, self.mesh, self.clients_axis))
-            sh = cohort_batch_sharding(self.mesh, self.clients_axis)
-            xb, yb = (jax.device_put(a, sh) for a in (xb, yb))
-            if not uniform:          # the uniform program never reads mask
-                mask = jax.device_put(mask, sh)
-        if uniform:
+        if self._n_data > 1:
+            if win.uniform:
+                new_params, losses = self._train_uniform_jit(
+                    stacked_params, win.xb, win.yb, win.bm)
+            else:
+                new_params, losses = self._train_jit(
+                    stacked_params, win.xb, win.yb, win.bm, win.mask)
+        elif win.uniform:
             new_params, losses = self._train_uniform_jit(stacked_params,
-                                                         xb, yb)
+                                                         win.xb, win.yb)
         else:
-            new_params, losses = self._train_jit(stacked_params, xb, yb,
-                                                 mask)
+            new_params, losses = self._train_jit(stacked_params, win.xb,
+                                                 win.yb, win.mask)
         losses = np.asarray(losses)
-        final = self.programs.summarize_losses(losses, steps, epochs)
+        final = self.programs.summarize_losses(losses, win.steps, epochs)
         if k < losses.shape[0]:
             new_params = jax.tree_util.tree_map(lambda l: l[:k], new_params)
         return new_params, final
@@ -836,34 +1100,65 @@ class CohortBackend:
 # ---------------------------------------------------------------------------
 
 
-def resolve_cohort_mesh(mesh, cohort_size: int, clients_axis: str = "clients"):
+def parse_mesh_spec(spec):
+    """A mesh spec's (clients, data) request.  Accepts ``"auto"``,
+    ``"CxD"`` strings (``"4x2"``, ``"8x1"``, ``"8"``), and 2-tuples whose
+    clients slot may be ``"auto"`` (``("auto", 2)``, ``(4, 2)``)."""
+    if isinstance(spec, str):
+        parts = spec.lower().split("x")
+        if len(parts) > 2 or not all(
+                p == "auto" or p.isdigit() for p in parts):
+            raise ValueError(
+                f"mesh must be 'auto', 'CxD' (e.g. '4x2'), a (clients, "
+                f"data) tuple, None or a Mesh: {spec!r}")
+    elif isinstance(spec, (tuple, list)):
+        parts = list(spec)
+        if len(parts) != 2:
+            raise ValueError(f"mesh tuple must be (clients, data): {spec!r}")
+    else:
+        raise TypeError(f"unsupported mesh spec: {spec!r}")
+    clients = parts[0]
+    data = int(parts[1]) if len(parts) > 1 else 1
+    if clients != "auto":
+        clients = int(clients)
+    return clients, data
+
+
+def resolve_cohort_mesh(mesh, cohort_size: int, clients_axis: str = "clients",
+                        data_axis: str = "data"):
     """``"auto"`` -> a clients mesh clamped to this host's devices (never
-    raises; 1 device degrades to the single-device engine), ``None`` ->
-    single-device, a Mesh -> itself."""
-    if isinstance(mesh, str):
-        if mesh != "auto":
-            raise ValueError(f"mesh must be 'auto', None or a Mesh: {mesh!r}")
-        from repro.launch.mesh import make_cohort_mesh
-        return make_cohort_mesh(cohort_size, axis=clients_axis)
-    return mesh
+    raises; 1 device degrades to the single-device engine); ``"CxD"`` (e.g.
+    ``"4x2"``) or a ``(clients, data)`` tuple (clients may be ``"auto"`` ->
+    ``cohort_size``) -> the 2-D (clients, data) mesh, clamped the same way;
+    ``None`` -> single-device; a Mesh -> itself."""
+    if mesh is None or hasattr(mesh, "axis_names"):
+        return mesh
+    clients, data = parse_mesh_spec(mesh)
+    if clients == "auto":
+        clients = cohort_size
+    from repro.launch.mesh import make_cohort_mesh
+    return make_cohort_mesh(clients, axis=clients_axis, data=data,
+                            data_axis=data_axis)
 
 
 def build_cohort_engine(backend, train_shards: Sequence, *,
                         cohort_size: int, mesh="auto",
                         clients_axis: str = "clients",
-                        epochs: Optional[int] = None
+                        data_axis: str = "data",
+                        epochs: Optional[int] = None,
+                        overlap: bool = True
                         ) -> Optional[CohortBackend]:
     """One-stop engine construction for any registered backend family:
-    resolves the mesh, builds the engine, and pre-registers the training
-    shards so the first flush compiles the steady-state program.  Returns
-    ``None`` when cohort execution is off (``cohort_size <= 1``) or the
-    backend has no registered program suite — callers then run the
-    sequential path."""
+    resolves the mesh spec (1-D or 2-D, see :func:`resolve_cohort_mesh`),
+    builds the engine, and pre-registers the training shards so the first
+    flush compiles the steady-state program.  Returns ``None`` when cohort
+    execution is off (``cohort_size <= 1``) or the backend has no
+    registered program suite — callers then run the sequential path."""
     if cohort_size <= 1 or not CohortBackend.supports(backend):
         return None
     engine = CohortBackend(
         backend, capacity=cohort_size,
-        mesh=resolve_cohort_mesh(mesh, cohort_size, clients_axis),
-        clients_axis=clients_axis)
+        mesh=resolve_cohort_mesh(mesh, cohort_size, clients_axis, data_axis),
+        clients_axis=clients_axis, data_axis=data_axis, overlap=overlap)
     engine.register_shards(train_shards, epochs=epochs)
     return engine

@@ -46,19 +46,32 @@ def make_host_mesh(data: int = 1, model: int = 1, strict: bool = True):
     return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))
 
 
-def make_cohort_mesh(n_clients: int, axis: str = "clients"):
-    """1-D client-axis mesh for the SPMD cohort engine, clamped to the
-    devices this host actually has — it NEVER raises for lack of devices.
+def make_cohort_mesh(n_clients: int, axis: str = "clients",
+                     data: int = 1, data_axis: str = "data"):
+    """Client-axis mesh for the SPMD cohort engine, clamped to the devices
+    this host actually has — it NEVER raises for lack of devices.
 
-    On a 1-device host it returns a 1-device mesh, which the cohort engine
-    treats as "no mesh" (the exact single-device ``vmap`` path), so callers
-    can use this unconditionally as their default.  Ask for more devices
-    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
-    any jax import) on CPU, e.g. in CI."""
+    ``data=1`` (default) builds the 1-D ``(clients,)`` mesh.  ``data=D``
+    builds the 2-D ``(clients, data)`` mesh: each client group's TRAINING
+    DATA (the per-step batch axis) additionally shards ``D`` ways, with
+    per-group gradient psums re-replicating the client models (see
+    ``repro.fl.cohort``).  Clamping degrades cleanly: the ``data`` axis
+    shrinks to the host first, then the client axis to whatever devices
+    remain — so a 1-device host always yields a 1-device 1-D mesh, which
+    the cohort engine treats as "no mesh" (the exact single-device ``vmap``
+    path), and callers can use this unconditionally as their default.  Ask
+    for more devices with ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=N`` (set before any jax import) on CPU, e.g. in CI."""
     import jax
-    n = max(1, min(int(n_clients), len(jax.devices())))
+    avail = len(jax.devices())
+    d = max(1, min(int(data), avail))
+    c = max(1, min(int(n_clients), avail // d))
     from jax.sharding import Mesh
-    return Mesh(np.asarray(jax.devices()[:n]), (axis,))
+    if d == 1:
+        # exact back-compat 1-D mesh: no vestigial size-1 data axis
+        return Mesh(np.asarray(jax.devices()[:c]), (axis,))
+    dev = np.asarray(jax.devices()[:c * d]).reshape(c, d)
+    return Mesh(dev, (axis, data_axis))
 
 
 # TPU v5e hardware constants (roofline targets)

@@ -319,33 +319,73 @@ def replicated(tree, mesh: Mesh):
 # -- cohort (stacked K-client) trees ----------------------------------------
 #
 # The FL cohort engine (repro.fl.cohort) keeps K client models stacked as one
-# pytree with a leading client axis.  Its SPMD layout is one rule: shard that
-# leading axis over the ``clients`` mesh axis, replicate everything else —
-# per-client model parallelism belongs to the per-leaf rules above and
+# pytree with a leading client axis.  Its SPMD layout is two rules: shard
+# that leading axis over the ``clients`` mesh axis, and — on a 2-D
+# (clients, data) mesh — shard a designated SAMPLE dim of the batch arrays
+# over the ``data`` axis while the client models stay REPLICATED within
+# each client group (per-group gradient psums keep them in lockstep).
+# Per-client model parallelism belongs to the per-leaf rules above and
 # composes via extra mesh axes, never by splitting a client's own dims here.
 
 
-def cohort_pspec(axis: str = "clients") -> P:
-    """PartitionSpec of a stacked-cohort leaf: leading client axis sharded."""
-    return P(axis)
+def cohort_pspec(axis: str = "clients", data_axis: Optional[str] = None,
+                 data_dim: Optional[int] = None) -> P:
+    """PartitionSpec of a stacked-cohort array: leading client axis sharded
+    over ``axis``; with ``data_axis`` AND ``data_dim`` given, that dim
+    additionally shards over the data axis (batch/sample dims of xb/yb/eval
+    arrays — dim 2 for train batches (K, T, B, ...), dim 1 for eval shards
+    (K, N, ...)).  Params never take a data dim: they replicate within a
+    client group."""
+    if data_axis is None or data_dim is None:
+        return P(axis)
+    if data_dim < 1:
+        raise ValueError(f"data_dim must be >= 1 (got {data_dim}); dim 0 is "
+                         "the client axis")
+    spec = [axis] + [None] * (data_dim - 1) + [data_axis]
+    return P(*spec)
 
 
-def cohort_batch_sharding(mesh: Mesh, axis: str = "clients") -> NamedSharding:
-    """NamedSharding for a cohort batch array (xb/yb/mask): leading client
-    axis over ``axis``, all data dims replicated.  One rule for every
-    backend family — the engine never inspects what the trailing dims hold
-    (image batches, token windows, masks)."""
+def _check_axis(mesh: Mesh, axis: str) -> None:
     if axis not in mesh.shape:
         raise ValueError(f"mesh {tuple(mesh.axis_names)} has no {axis!r} axis")
-    return NamedSharding(mesh, cohort_pspec(axis))
 
 
-def stacked_client_shardings(stacked, mesh: Mesh, axis: str = "clients"):
+def cohort_batch_sharding(mesh: Mesh, axis: str = "clients",
+                          data_axis: Optional[str] = None,
+                          data_dim: Optional[int] = None) -> NamedSharding:
+    """NamedSharding for a cohort batch array (xb/yb/mask): leading client
+    axis over ``axis``; on a 2-D mesh, ``data_dim`` (the sample dim) over
+    ``data_axis``.  One rule for every backend family — the engine never
+    inspects what the trailing dims hold (image batches, token windows,
+    masks)."""
+    _check_axis(mesh, axis)
+    if data_axis is not None:
+        _check_axis(mesh, data_axis)
+    return NamedSharding(mesh, cohort_pspec(axis, data_axis, data_dim))
+
+
+def data_shard_sharding(mesh: Mesh, data_axis: str = "data",
+                        dim: int = 0) -> NamedSharding:
+    """NamedSharding for an array carrying NO client axis whose ``dim``
+    shards over the data axis (e.g. the shared validation shard of a tip
+    sweep, or the per-step batch-row mask)."""
+    _check_axis(mesh, data_axis)
+    spec = [None] * dim + [data_axis]
+    return NamedSharding(mesh, P(*spec))
+
+
+def stacked_client_shardings(stacked, mesh: Mesh, axis: str = "clients",
+                             data_axis: Optional[str] = None):
     """NamedShardings for a ``tree_stack``-ed K-client pytree: every leaf's
     leading K axis over ``axis``, remaining dims replicated.  K must divide
     ``mesh.shape[axis]`` times an integer — the cohort engine guarantees it
-    by padding the client axis to a multiple of the mesh size."""
-    if axis not in mesh.shape:
-        raise ValueError(f"mesh {tuple(mesh.axis_names)} has no {axis!r} axis")
+    by padding the client axis to a multiple of the mesh size.  On a 2-D
+    (clients, data) mesh the params stay REPLICATED over ``data_axis``
+    (each device in a client group holds the group's full models; only the
+    batch arrays split) — the axis is accepted and validated here so
+    callers can pass their full mesh spec through one chokepoint."""
+    _check_axis(mesh, axis)
+    if data_axis is not None:
+        _check_axis(mesh, data_axis)
     return jax.tree_util.tree_map(
         lambda _: NamedSharding(mesh, cohort_pspec(axis)), stacked)

@@ -1,0 +1,239 @@
+"""2-D (clients, data) SPMD cohort engine: equivalence with the 1-D
+clients mesh and the single-device vmap path (ISSUE 4 tentpole contract).
+
+Sharding each client group's batch/sample axes over a ``data`` mesh axis
+(sum-form losses/metrics, psum'd per group) must not change numerics — for
+ragged cohorts, for batch sizes NOT divisible by the data-axis size (pad +
+``bm`` masking), and end-to-end through the coordinator.  Single-device
+hosts run the construction/degradation tests and skip the rest; CI's
+multi-device job (``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+runs everything on both 8x1 and 4x2 meshes.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.cnn import vgg_for
+from repro.core.aggregate import (stacked_mean, stacked_weighted, tree_mean,
+                                  tree_stack, tree_unstack, tree_weighted)
+from repro.data import make_benchmark_dataset, split_811
+from repro.data.synthetic import Dataset
+from repro.fl.backend import CNNBackend
+from repro.fl.cohort import CohortBackend, resolve_cohort_mesh
+from repro.launch.mesh import make_cohort_mesh
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 4, reason="needs >=4 devices for a 2-D mesh "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=N before jax import)")
+
+ATOL = 5e-3           # same matmul-vs-conv budget as test_cohort_mesh.py
+
+
+def _leaves_close(a, b, atol=ATOL):
+    return all(np.allclose(x, y, atol=atol) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+def _shards(splits, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    train = splits["train"]
+    out = []
+    for s in sizes:
+        idx = rng.choice(len(train), size=s, replace=False)
+        out.append(Dataset(train.x[idx], train.y[idx]))
+    return out
+
+
+# -- construction / degradation (run everywhere) -----------------------------
+
+
+def test_make_cohort_mesh_2d_shapes_and_clamping():
+    mesh = make_cohort_mesh(4, data=2)
+    if N_DEV >= 8:
+        assert dict(mesh.shape) == {"clients": 4, "data": 2}
+        assert mesh.axis_names == ("clients", "data")
+    elif N_DEV == 1:
+        # data shrinks to the host first, then clients: 1-D single device
+        assert mesh.axis_names == ("clients",)
+        assert dict(mesh.shape)["clients"] == 1
+    # data axis larger than the host clamps instead of raising
+    mesh = make_cohort_mesh(2, data=10_000)
+    assert int(np.prod(list(dict(mesh.shape).values()))) <= N_DEV
+    # data=1 keeps the exact 1-D back-compat mesh
+    assert make_cohort_mesh(3, data=1).axis_names == ("clients",)
+
+
+def test_resolve_cohort_mesh_specs():
+    m = resolve_cohort_mesh("4x2", cohort_size=8)
+    assert "clients" in m.shape
+    m_auto = resolve_cohort_mesh(("auto", 2), cohort_size=8)
+    assert "clients" in m_auto.shape
+    m_tuple = resolve_cohort_mesh((2, 2), cohort_size=8)
+    assert "clients" in m_tuple.shape
+    assert resolve_cohort_mesh(None, cohort_size=8) is None
+    mesh = make_cohort_mesh(2)
+    assert resolve_cohort_mesh(mesh, cohort_size=8) is mesh
+    with pytest.raises(ValueError):
+        resolve_cohort_mesh("bogus", cohort_size=8)
+    with pytest.raises(ValueError):
+        resolve_cohort_mesh("4x2x1", cohort_size=8)
+    with pytest.raises(ValueError):
+        resolve_cohort_mesh((4, 2, 1), cohort_size=8)
+    with pytest.raises(TypeError):
+        resolve_cohort_mesh(4, cohort_size=8)
+
+
+def test_cohort_pspecs_with_data_axis():
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import (cohort_batch_sharding, cohort_pspec,
+                                      data_shard_sharding,
+                                      stacked_client_shardings)
+    assert cohort_pspec() == P("clients")
+    assert cohort_pspec("clients", "data", 2) == P("clients", None, "data")
+    assert cohort_pspec("clients", "data", 1) == P("clients", "data")
+    with pytest.raises(ValueError):
+        cohort_pspec("clients", "data", 0)
+
+    mesh = make_cohort_mesh(max(N_DEV // 2, 1), data=min(N_DEV, 2))
+    if "data" in mesh.shape:
+        sh = cohort_batch_sharding(mesh, "clients", "data", 2)
+        assert sh.spec == P("clients", None, "data")
+        assert data_shard_sharding(mesh, "data").spec == P("data")
+        backend = CNNBackend(vgg_for("mnist"), local_epochs=1, batch_size=8)
+        stacked = tree_stack([backend.init(jax.random.PRNGKey(i))
+                              for i in range(2)])
+        # params stay replicated within a client group: no data axis
+        for s in jax.tree_util.tree_leaves(
+                stacked_client_shardings(stacked, mesh, data_axis="data")):
+            assert s.spec == P("clients")
+        with pytest.raises(ValueError):
+            cohort_batch_sharding(mesh, "clients", "nope", 2)
+
+
+def test_one_by_one_mesh_degrades_to_single_device_engine():
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=1, batch_size=8)
+    engine = CohortBackend(backend, capacity=4,
+                           mesh=make_cohort_mesh(1, data=1))
+    assert engine.mesh is None
+    assert engine._n_shards == 1 and engine._n_data == 1
+
+
+# -- 2-D equivalence properties (the tentpole contract) ----------------------
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_benchmark_dataset("mnist", n_samples=600, seed=4)
+    splits = split_811(ds)
+    return splits
+
+
+@multi_device
+@settings(max_examples=2, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+def test_2d_mesh_matches_1d_and_single_device(n_clients, seed):
+    """Ragged cohorts (K not divisible by the mesh) with an ODD batch size
+    (not divisible by the data axis, so every step pads + bm-masks batch
+    rows): the 2-D engine must match both the 1-D clients mesh and the
+    single-device vmap engine on weights, losses, accuracies, signatures,
+    shared-model eval and tip sweeps."""
+    ds = make_benchmark_dataset("mnist", n_samples=500, seed=3)
+    splits = split_811(ds)
+    rng = np.random.default_rng(seed)
+    sizes = [int(rng.integers(40, 120)) for _ in range(n_clients)]
+    shards = _shards(splits, sizes, seed % 1000)
+    # batch_size=9 is NOT divisible by the data axis (2): exercises the
+    # pad+bm-mask path on every training step
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=1, batch_size=9)
+    mesh_1d = make_cohort_mesh(min(N_DEV, 4))
+    mesh_2d = make_cohort_mesh(min(N_DEV // 2, 4), data=2)
+    assert "data" in mesh_2d.shape
+
+    single = CohortBackend(backend, capacity=n_clients)
+    one_d = CohortBackend(backend, capacity=n_clients, mesh=mesh_1d)
+    two_d = CohortBackend(backend, capacity=n_clients, mesh=mesh_2d)
+    assert two_d._n_data == 2
+
+    params = [backend.init(jax.random.PRNGKey(seed % 5 + i))
+              for i in range(n_clients)]
+    seeds = [int(rng.integers(2 ** 31)) for _ in range(n_clients)]
+
+    p0, l0 = single.train_cohort(params, shards, seeds)
+    p1, l1 = one_d.train_cohort(params, shards, seeds)
+    p2, l2 = two_d.train_cohort(params, shards, seeds)
+    for i in range(n_clients):
+        assert _leaves_close(p0[i], p2[i]), f"client {i}: 2-D != single"
+        assert _leaves_close(p1[i], p2[i]), f"client {i}: 2-D != 1-D"
+        assert l0[i] == pytest.approx(l2[i], abs=5e-2)
+
+    # eval-family programs compared on IDENTICAL weights (p0): comparing
+    # each engine's own trained weights would let a legitimate 5e-3 weight
+    # difference flip a borderline argmax and fail the tight accuracy atol
+    assert np.allclose(single.evaluate_cohort(p0, shards),
+                       two_d.evaluate_cohort(p0, shards), atol=1e-4)
+    assert np.allclose(single.signature_cohort(p0, shards),
+                       two_d.signature_cohort(p0, shards), atol=1e-2)
+    assert np.allclose(single.evaluate_shared(p0[0], shards),
+                       two_d.evaluate_shared(p0[0], shards), atol=1e-4)
+    assert np.allclose(single.evaluate_many(p0, shards[0]),
+                       two_d.evaluate_many(p0, shards[0]), atol=1e-4)
+
+
+@multi_device
+def test_2d_aggregation_collectives_match_listwise():
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=1, batch_size=8)
+    mesh = make_cohort_mesh(min(N_DEV // 2, 4), data=2)
+    assert "data" in mesh.shape
+    rng = np.random.default_rng(0)
+    models = [backend.init(jax.random.PRNGKey(i)) for i in range(5)]
+    stacked = tree_stack(models)
+    assert _leaves_close(
+        stacked_mean(stacked, mesh=mesh, data_axis="data"),
+        tree_mean(models), atol=1e-6)
+    w = rng.random((3, 5)).astype(np.float32) + 0.01
+    per_client = tree_unstack(
+        stacked_weighted(stacked, w, mesh=mesh, data_axis="data"))
+    for k in range(3):
+        assert _leaves_close(per_client[k],
+                             tree_weighted(models, list(w[k])), atol=1e-6)
+
+
+@multi_device
+def test_coordinator_2d_mesh_end_to_end(world):
+    """mesh="CxD" through DagAflConfig: the 2-D run completes every round,
+    the DAG verifies, and accuracy matches the single-device run."""
+    from repro.core import (DagAflConfig, DagAflCoordinator,
+                            TipSelectionConfig, verify_full_dag)
+    from repro.core.simulator import CostModel, make_profiles
+    from repro.data import partition_dirichlet
+
+    splits = world
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=1, batch_size=9)
+    parts = partition_dirichlet(splits["train"], 4, beta=0.5, seed=0)
+    cd = []
+    for p in parts:
+        s = split_811(p, seed=1)
+        cd.append({"train": s["train"], "val": s["val"], "test": s["test"]})
+
+    accs = {}
+    for mesh in (f"{min(N_DEV // 2, 4)}x2", None):
+        cfg = DagAflConfig(n_clients=4, max_rounds=2, local_epochs=1,
+                           tip=TipSelectionConfig(n_select=2), seed=0,
+                           cohort_size=4, cohort_window=2.0, mesh=mesh)
+        coord = DagAflCoordinator(backend, cd, splits["test"], cfg,
+                                  CostModel(local_epoch=2.0),
+                                  make_profiles(4, 0.5, 0))
+        if mesh is not None:
+            assert coord.cohort.mesh is not None
+            assert coord.cohort._n_data == 2       # 2-D path engaged
+        res = coord.run()
+        ok, reason = verify_full_dag(coord.ledger)
+        assert ok, reason
+        assert res.rounds == cfg.n_clients * cfg.max_rounds
+        accs[mesh] = res.final_accuracy
+    vals = list(accs.values())
+    # one borderline argmax flip on the ~60-sample test set is legitimate
+    # reduction-reorder noise; more indicates a numerics break
+    assert abs(vals[0] - vals[1]) <= 0.04

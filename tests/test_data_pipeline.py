@@ -1,0 +1,169 @@
+"""Host-side data pipeline: TokenPipeline sharding and the cohort
+WindowAssembler (ISSUE 4 satellites + double-buffered overlap parity).
+
+TokenPipeline contract: (batch, seq+1) windows in-vocab, disjoint
+per-client shards covering the WHOLE stream (no silent tail loss), and a
+clear error — not a cryptic ``rng.integers`` crash — when a shard is too
+short for even one sequence window.
+
+WindowAssembler contract: background/prefetched assembly produces
+bit-identical windows to inline assembly (the per-seed np RNG streams
+don't depend on where sampling runs), and the engine-level overlap toggle
+never changes training results.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.cnn import vgg_for
+from repro.data import make_benchmark_dataset, split_811
+from repro.data.pipeline import TokenPipeline, WindowAssembler
+from repro.data.synthetic import Dataset, make_lm_dataset
+from repro.fl.backend import CNNBackend
+from repro.fl.cohort import CohortBackend
+
+
+# -- TokenPipeline -----------------------------------------------------------
+
+
+def test_token_pipeline_shapes_and_dtype():
+    pipe = TokenPipeline(vocab=32, batch=4, seq=16, n_tokens=2000, seed=0)
+    it = iter(pipe)
+    arr = next(it)
+    assert arr.shape == (4, 17)
+    assert arr.min() >= 0 and arr.max() < 32
+    d = pipe.batch_dict(arr)
+    assert d["tokens"].shape == (4, 16) and d["tokens"].dtype == np.int32
+    assert d["labels"].shape == (4, 16) and d["labels"].dtype == np.int32
+    assert np.array_equal(d["tokens"][:, 1:], d["labels"][:, :-1])
+
+
+def test_token_pipeline_shards_are_disjoint_and_cover_stream():
+    # 1003 tokens over 4 shards: array_split semantics — no tail loss
+    n_tokens, n_shards = 1003, 4
+    full = make_lm_dataset(vocab=16, n_tokens=n_tokens, seed=7)
+    shards = [TokenPipeline(vocab=16, batch=2, seq=8, n_tokens=n_tokens,
+                            seed=7, n_shards=n_shards, shard=s).stream
+              for s in range(n_shards)]
+    assert sum(len(s) for s in shards) == n_tokens   # every token owned
+    assert np.array_equal(np.concatenate(shards), full)  # disjoint slices
+    # deterministic sampling per (seed, shard)
+    a = next(iter(TokenPipeline(vocab=16, batch=2, seq=8, n_tokens=n_tokens,
+                                seed=7, n_shards=n_shards, shard=1)))
+    b = next(iter(TokenPipeline(vocab=16, batch=2, seq=8, n_tokens=n_tokens,
+                                seed=7, n_shards=n_shards, shard=1)))
+    assert np.array_equal(a, b)
+
+
+def test_token_pipeline_short_shard_raises_clear_error():
+    """Regression: small n_tokens with many shards used to reach
+    ``rng.integers(0, <non-positive>)`` inside iteration; now construction
+    raises with actionable guidance."""
+    with pytest.raises(ValueError, match="n_shards"):
+        TokenPipeline(vocab=16, batch=2, seq=64, n_tokens=600, n_shards=16)
+    # boundary: the smallest legal shard (seq + 1 tokens = exactly one
+    # window) still samples, and that window reaches the final token
+    pipe = TokenPipeline(vocab=16, batch=2, seq=8, n_tokens=9)
+    arr = next(iter(pipe))
+    assert arr.shape == (2, 9)
+    assert np.array_equal(arr[0], pipe.stream)       # start 0 is the only one
+
+
+def test_token_pipeline_final_token_is_sampleable():
+    """Regression: the start-range upper bound used to exclude the last
+    valid window, so a shard's final token never appeared in any batch."""
+    pipe = TokenPipeline(vocab=16, batch=64, seq=8, n_tokens=12, seed=1)
+    it = iter(pipe)
+    last = pipe.stream[-1]
+    seen_last = any(
+        np.any(arr[:, -1] == last) and
+        any(np.array_equal(row, pipe.stream[-9:]) for row in arr)
+        for arr in (next(it) for _ in range(50)))
+    assert seen_last, "the final window (and token) was never sampled"
+
+
+def test_token_pipeline_rejects_bad_shard_index():
+    with pytest.raises(ValueError, match="out of range"):
+        TokenPipeline(vocab=16, batch=2, seq=8, n_tokens=1000,
+                      n_shards=2, shard=2)
+
+
+# -- WindowAssembler ---------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cnn_world():
+    ds = make_benchmark_dataset("mnist", n_samples=400, seed=5)
+    splits = split_811(ds)
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=1, batch_size=16)
+    rng = np.random.default_rng(0)
+    shards = []
+    for s in (40, 64, 52):
+        idx = rng.choice(len(splits["train"]), size=s, replace=False)
+        shards.append(Dataset(splits["train"].x[idx], splits["train"].y[idx]))
+    return backend, shards
+
+
+def _win_arrays(win):
+    return [np.asarray(win.xb), np.asarray(win.yb), np.asarray(win.mask)] + \
+        ([np.asarray(win.bm)] if win.bm is not None else [])
+
+
+def test_window_assembler_overlap_parity(cnn_world):
+    """Prefetched background assembly == inline assembly, bit for bit:
+    same batches, same masks, same step counts, same RNG streams."""
+    backend, shards = cnn_world
+    seeds = [11, 22, 33]
+    eng_inline = CohortBackend(backend, capacity=4, overlap=False)
+    eng_overlap = CohortBackend(backend, capacity=4, overlap=True)
+    for eng in (eng_inline, eng_overlap):
+        eng.register_shards(shards, epochs=1)
+
+    win_inline = eng_inline.assembler.take(shards, seeds, 1, 4)
+    eng_overlap.prefetch_window(shards, seeds, epochs=1)
+    win_over = eng_overlap.assembler.take(shards, seeds, 1, 4)
+    assert win_inline.steps == win_over.steps
+    assert win_inline.uniform == win_over.uniform
+    for a, b in zip(_win_arrays(win_inline), _win_arrays(win_over)):
+        assert np.array_equal(a, b)
+
+    # a mismatched prefetch must fall back to correct inline assembly
+    eng_overlap.prefetch_window(shards, [99, 98, 97], epochs=1)
+    win_mismatch = eng_overlap.assembler.take(shards, seeds, 1, 4)
+    for a, b in zip(_win_arrays(win_inline), _win_arrays(win_mismatch)):
+        assert np.array_equal(a, b)
+    eng_overlap.assembler.close()
+
+
+def test_window_assembler_train_results_identical(cnn_world):
+    """End-to-end: cohort training with the overlapped pipeline returns the
+    same weights and losses as with inline assembly."""
+    backend, shards = cnn_world
+    seeds = [3, 4, 5]
+    params = [backend.init(jax.random.PRNGKey(i)) for i in range(3)]
+    eng_a = CohortBackend(backend, capacity=4, overlap=False)
+    eng_b = CohortBackend(backend, capacity=4, overlap=True)
+    pa, la = eng_a.train_cohort(params, shards, seeds)
+    eng_b.prefetch_window(shards, seeds)       # double-buffered path
+    pb, lb = eng_b.train_cohort(params, shards, seeds)
+    assert la == pytest.approx(lb, abs=1e-6)
+    for ta, tb in zip(pa, pb):
+        for x, y in zip(jax.tree_util.tree_leaves(ta),
+                        jax.tree_util.tree_leaves(tb)):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+    eng_b.assembler.close()
+
+
+def test_window_assembler_monotone_pad_target(cnn_world):
+    """register_shards pre-sizes the step-axis target; a longer window can
+    only grow it (monotone — the steady-state program never re-compiles
+    smaller)."""
+    backend, shards = cnn_world
+    asm = WindowAssembler(CohortBackend(backend, capacity=4,
+                                        overlap=False).programs,
+                          overlap=False)
+    asm.register_shards(shards, epochs=1)
+    t0 = asm.pad_T
+    assert t0 == max(max(len(s) // backend.batch_size, 1) for s in shards)
+    asm.register_shards(shards[:1], epochs=2)
+    assert asm.pad_T >= t0

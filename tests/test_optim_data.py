@@ -116,6 +116,23 @@ def test_dirichlet_no_empty_clients():
     assert all(len(p) >= 8 for p in parts)
 
 
+def test_dirichlet_topup_never_duplicates_within_client():
+    """Regression (ISSUE 4): the min_per_client top-up used to sample
+    global indices WITH replacement, so a starved client could hold the
+    same row twice.  Skewed tiny worlds force the top-up for many clients;
+    every client's rows must be unique (cross-client overlap from the
+    top-up pool remains legal — see the docstring)."""
+    for seed in range(4):
+        ds = make_benchmark_dataset("mnist", n_samples=60, seed=seed)
+        parts = partition_dirichlet(ds, 12, beta=0.05, seed=seed)
+        assert all(len(p) >= 5 for p in parts)    # small pool: best effort
+        for k, p in enumerate(parts):
+            rows = p.x.reshape(len(p), -1)
+            uniq = np.unique(np.round(rows, 6), axis=0)
+            assert len(uniq) == len(rows), \
+                f"client {k} holds duplicate rows (seed {seed})"
+
+
 def test_datasets_are_learnable_and_distinct():
     easy = make_benchmark_dataset("mnist", n_samples=400)
     hard = make_benchmark_dataset("cifar100", n_samples=400)
