@@ -1,8 +1,13 @@
-"""CI perf-regression gate for the cohort execution engine.
+"""CI perf-regression gate for the cohort engine and the bounded ledger.
 
-Compares the smoke run's ``experiments/fl/cohort_speedup.json`` (written by
-``benchmarks/chain_perf.py --cohort-size K``) against the checked-in floors
-in ``benchmarks/baseline_thresholds.json`` and exits non-zero on regression:
+Dispatches on the results file's ``kind`` field: ``ledger_day`` results
+(written by ``benchmarks/ledger_perf.py``) are gated on the bounded-frontier
+invariants under the ``ledger_day`` thresholds sub-dict; everything else is
+a cohort smoke (written by ``benchmarks/chain_perf.py --cohort-size K``).
+Both compare against the checked-in floors in
+``benchmarks/baseline_thresholds.json`` and exit non-zero on regression.
+
+Cohort smoke:
 
   * ``speedup``            — vectorized cohort engine vs the sequential
                              path; must stay above ``cohort_speedup_min``
@@ -24,6 +29,34 @@ The sharded wall-clock is reported but NOT gated: on CI's 2-core runners a
 forced 8-device host mesh oversubscribes cores, so its speedup measures the
 runner, not the code.  Correctness of the sharded path is gated through
 ``mesh_accuracy_gap`` and the test suite instead.
+
+Ledger day-in-the-life (``kind: ledger_day``):
+
+  * ``peak_live_frac``     — peak live-transaction count as a fraction of
+                             all published transactions; must stay under
+                             ``peak_live_frac_max`` — memory is bounded by
+                             the consensus frontier, not by history.
+  * ``peak_store_frac``    — same bound for ModelStore entries: pruning
+                             must evict model bodies, not just metadata.
+  * ``pruned_frac``        — at least ``pruned_frac_min`` of history must
+                             actually have been folded into checkpoints.
+  * ``select_work_vs_history`` — deterministic per-selection ledger work
+                             (reachability log entries + BFS visits +
+                             tip-heap pops) over the last quarter of
+                             rounds, as a fraction of total transactions;
+                             must stay under
+                             ``select_work_vs_history_max``.  A
+                             linear-in-history implementation (whole-DAG
+                             BFS, all-tips scan) scores ~1; index-backed
+                             selection sits orders of magnitude below.
+  * ``audit_tx_ratio``     — the incremental verifier must have re-derived
+                             every transaction's Eq. 7 hash at least once
+                             (``audit_tx_ratio_min``).
+  * ``verify_ok``          — every incremental audit plus the final full
+                             verification passed.
+
+The ledger gate is wall-clock-free by construction — every gated quantity
+is an event count, so a loaded CI runner cannot flake it.
 """
 from __future__ import annotations
 
@@ -49,8 +82,41 @@ def active_thresholds(thresholds: dict, results: dict) -> dict:
     return thresholds
 
 
+def check_ledger(results: dict, thresholds: dict) -> list:
+    """Gate a ``ledger_day`` results file (see module docstring)."""
+    failures = []
+    t = thresholds.get("ledger_day", {})
+
+    def over(key, limit_key):
+        limit = t[limit_key]
+        val = results.get(key)
+        if val is None:
+            failures.append(f"results carry no '{key}' field")
+        elif val > limit:
+            failures.append(f"{key} {val:.4f} above {limit:.4f}")
+
+    over("peak_live_frac", "peak_live_frac_max")
+    over("peak_store_frac", "peak_store_frac_max")
+    over("select_work_vs_history", "select_work_vs_history_max")
+    pruned = results.get("pruned_frac", 0.0)
+    if pruned < t["pruned_frac_min"]:
+        failures.append(f"pruned_frac {pruned:.4f} below "
+                        f"{t['pruned_frac_min']:.4f}")
+    audited = results.get("audit_tx_ratio", 0.0)
+    if audited < t["audit_tx_ratio_min"]:
+        failures.append(f"audit_tx_ratio {audited:.4f} below "
+                        f"{t['audit_tx_ratio_min']:.4f} — the incremental "
+                        "verifier did not cover every append")
+    if not results.get("verify_ok", False):
+        failures.append("verify_ok is false — an incremental audit or the "
+                        "final full verification failed")
+    return failures
+
+
 def check(results: dict, thresholds: dict, quick: bool = False) -> list:
     """Returns a list of failure strings (empty = gate passes)."""
+    if results.get("kind") == "ledger_day":
+        return check_ledger(results, thresholds)
     failures = []
     thresholds = active_thresholds(thresholds, results)
     floor = thresholds["cohort_speedup_min"]
@@ -104,6 +170,24 @@ def main() -> None:
         thresholds = json.load(f)
 
     failures = check(results, thresholds, quick=args.quick)
+    if results.get("kind") == "ledger_day":
+        print(f"perf gate[ledger_day, n={results.get('n_clients')}]: "
+              f"peak_live_frac="
+              f"{results.get('peak_live_frac', float('nan')):.3f} "
+              f"peak_store_frac="
+              f"{results.get('peak_store_frac', float('nan')):.3f} "
+              f"pruned_frac={results.get('pruned_frac', float('nan')):.3f} "
+              f"work_vs_history="
+              f"{results.get('select_work_vs_history', float('nan')):.4f} "
+              f"audit_tx_ratio="
+              f"{results.get('audit_tx_ratio', float('nan')):.2f} "
+              f"verify_ok={results.get('verify_ok')}")
+        if failures:
+            for msg in failures:
+                print(f"PERF GATE FAIL: {msg}", file=sys.stderr)
+            sys.exit(1)
+        print("perf gate: PASS")
+        return
     if args.require_mesh and "mesh_accuracy_gap" not in results:
         failures.append("--require-mesh: no sharded-engine results; the "
                         "multi-device smoke did not exercise shard_map")

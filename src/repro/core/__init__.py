@@ -8,23 +8,33 @@ from repro.core.aggregate import (tree_interpolate, tree_mean,
                                   tree_size_bytes, tree_weighted)
 from repro.core.coordinator import (DagAflConfig, DagAflCoordinator,
                                     resolve_cohort_mesh)
-from repro.core.dag import (DAGLedger, ModelStore, Transaction, TxMetadata,
-                            compute_tx_hash)
+from repro.core.dag import (BoundedDAGLedger, CheckpointRecord, DAGLedger,
+                            LedgerView, ModelStore, Transaction, TxMetadata,
+                            checkpoint_root, compute_tx_hash,
+                            compute_tx_hash_from_digest)
 from repro.core.signature import (SimilarityContract, cosine_similarity,
                                   cosine_similarity_matrix)
 from repro.core.simulator import (ClientProfile, ConvergenceTracker, CostModel,
                                   EventLoop, RunResult, make_profiles)
-from repro.core.tip_selection import (TipScore, TipSelectionConfig, freshness,
-                                      select_tips, tipc)
-from repro.core.verify import (ValidationPath, extract_path, verify_full_dag,
-                               verify_path)
+from repro.core.tip_selection import (FnTipEvaluator, TipEvaluator, TipScore,
+                                      TipSelectionConfig, TipSelectionRequest,
+                                      TipSelector, freshness, select_tips,
+                                      tipc)
+from repro.core.verify import (IncrementalVerifier, ValidationPath,
+                               extract_path, verify_checkpoints,
+                               verify_full_dag, verify_path)
 
 __all__ = [
-    "DAGLedger", "ModelStore", "Transaction", "TxMetadata", "compute_tx_hash",
-    "TipSelectionConfig", "TipScore", "select_tips", "freshness", "tipc",
+    "DAGLedger", "BoundedDAGLedger", "LedgerView", "CheckpointRecord",
+    "ModelStore", "Transaction", "TxMetadata", "compute_tx_hash",
+    "compute_tx_hash_from_digest", "checkpoint_root",
+    "TipSelectionConfig", "TipSelectionRequest", "TipSelector",
+    "TipEvaluator", "FnTipEvaluator", "TipScore", "select_tips",
+    "freshness", "tipc",
     "SimilarityContract", "cosine_similarity", "cosine_similarity_matrix",
     "tree_mean", "tree_weighted", "tree_interpolate", "tree_size_bytes",
     "ValidationPath", "extract_path", "verify_path", "verify_full_dag",
+    "verify_checkpoints", "IncrementalVerifier",
     "ClientProfile", "ConvergenceTracker", "CostModel", "EventLoop",
     "RunResult", "make_profiles", "DagAflConfig", "DagAflCoordinator",
     "resolve_cohort_mesh",

@@ -39,12 +39,14 @@ import numpy as np
 
 from repro.core.aggregate import (stacked_weighted, tree_mean,
                                   tree_size_bytes, tree_stack, tree_unstack)
-from repro.core.dag import DAGLedger, ModelStore, TxMetadata
+from repro.core.dag import (BoundedDAGLedger, DAGLedger, ModelStore,
+                            TxMetadata)
 from repro.core.signature import SimilarityContract
 from repro.core.simulator import (ClientProfile, CohortWindow,
                                   ConvergenceTracker, CostModel, EventLoop,
                                   RunResult, make_profiles)
-from repro.core.tip_selection import TipSelectionConfig, select_tips
+from repro.core.tip_selection import (TipSelectionConfig, TipSelectionRequest,
+                                      TipSelector)
 from repro.core.verify import extract_path, verify_path
 
 
@@ -79,6 +81,15 @@ class DagAflConfig:
     # background thread while the device computes (False = inline assembly,
     # bit-identical results — the toggle exists for benchmarking/debugging)
     overlap: bool = True
+    # bounded-frontier ledger: > 0 switches to BoundedDAGLedger and folds
+    # confirmed ancestry into checkpoints every this many SIMULATED seconds
+    # (event-loop cadence), evicting pruned ModelStore entries.  Pruning
+    # preserves tips/reachability/selection exactly (see DESIGN.md); the
+    # run trajectory is identical to the unbounded ledger's, except that
+    # with verify_paths=True the trainers' stored paths end at the pruned
+    # boundary, so the (smaller) simulated audit cost shifts timings.
+    # 0 keeps the append-only reference ledger.
+    ledger_checkpoint_every: float = 0.0
 
 
 def resolve_cohort_mesh(mesh, cohort_size: int, clients_axis: str = "clients",
@@ -86,6 +97,23 @@ def resolve_cohort_mesh(mesh, cohort_size: int, clients_axis: str = "clients",
     """Back-compat alias for :func:`repro.fl.cohort.resolve_cohort_mesh`."""
     from repro.fl.cohort import resolve_cohort_mesh as _resolve
     return _resolve(mesh, cohort_size, clients_axis, data_axis)
+
+
+class _ClientTipEvaluator:
+    """:class:`repro.core.tip_selection.TipEvaluator` for one client,
+    bridging the coordinator's accuracy cache and the cohort engine's
+    batched validation."""
+
+    def __init__(self, coord: "DagAflCoordinator", client: int):
+        self.coord = coord
+        self.client = client
+
+    def evaluate(self, tx_id: str) -> float:
+        return self.coord._evaluate_tip(self.client, tx_id)
+
+    def warm(self, tx_ids) -> None:
+        if self.coord.cohort is not None and tx_ids:
+            self.coord._evaluate_tips_batch(self.client, tx_ids)
 
 
 class DagAflCoordinator:
@@ -104,9 +132,17 @@ class DagAflCoordinator:
         self.cost = cost or CostModel()
         self.profiles = profiles or make_profiles(cfg.n_clients,
                                                   cfg.heterogeneity, cfg.seed)
-        self.ledger = DAGLedger()
+        if cfg.ledger_checkpoint_every > 0:
+            self.ledger = BoundedDAGLedger(evict_fn=self._on_prune)
+        else:
+            self.ledger = DAGLedger()
         self.store = ModelStore()
+        # model refs whose tx was pruned while still being a client's
+        # LATEST (needed by the final per-client sweep); evicted as soon as
+        # the client publishes again
+        self._deferred_evict: Dict[int, str] = {}
         self.contract = SimilarityContract(cfg.n_clients)
+        self.selector = TipSelector(self.ledger, self.contract, cfg.tip)
         self.loop = EventLoop()
         self.tracker = ConvergenceTracker(cfg.target_accuracy, cfg.patience,
                                           min_updates=3)
@@ -115,8 +151,11 @@ class DagAflCoordinator:
         self._client_rounds = [0] * cfg.n_clients
         self._client_val = [0.0] * cfg.n_clients
         self._evals_total = 0
+        self._refs_issued = 0         # monotone ref keys (len() reuses slots
+                                      # once pruning evicts store entries)
         self._verify_failures = 0
         self._rounds_done = 0
+        self._t_last_round = 0.0
         self._cohorts_dispatched = 0
         self._val_sets = [client_data[c]["val"] for c in range(cfg.n_clients)]
         self.cohort = None
@@ -143,10 +182,22 @@ class DagAflCoordinator:
 
     # -- helpers -------------------------------------------------------------
 
+    def _on_prune(self, tx) -> None:
+        """BoundedDAGLedger eviction hook: drop a pruned transaction's
+        ModelStore entry.  A model still referenced as some client's LATEST
+        (the final per-client sweep needs it) is deferred until that client
+        publishes again, so the bounded run's results match the unbounded
+        ledger's exactly."""
+        client = tx.metadata.client_id
+        if self.ledger.latest_of(client) == tx.tx_id:
+            self._deferred_evict[client] = tx.model_ref
+        else:
+            self.store.evict(tx.model_ref)
+
     def _evaluate_tip(self, client: int, tx_id: str) -> float:
         key = (client, tx_id)
         if key not in self._acc_cache:
-            model = self.store.get(self.ledger.nodes[tx_id].model_ref)
+            model = self.store.get(self.ledger.get_tx(tx_id).model_ref)
             acc = self.backend.evaluate(model, self.client_data[client]["val"])
             self._acc_cache[key] = acc
             self._evals_total += 1
@@ -158,7 +209,7 @@ class DagAflCoordinator:
         missing = [t for t in tx_ids if (client, t) not in self._acc_cache]
         if not missing:
             return
-        models = [self.store.get(self.ledger.nodes[t].model_ref)
+        models = [self.store.get(self.ledger.get_tx(t).model_ref)
                   for t in missing]
         accs = self.cohort.evaluate_many(models,
                                          self.client_data[client]["val"])
@@ -168,7 +219,11 @@ class DagAflCoordinator:
 
     def _publish(self, client: int, model, accuracy: float, sig, epoch: int,
                  parents) -> None:
-        ref = self.store.put(f"m{len(self.store):06d}", model)
+        pending = self._deferred_evict.pop(client, None)
+        if pending is not None:         # pruned-while-latest: safe to drop now
+            self.store.evict(pending)
+        ref = self.store.put(f"m{self._refs_issued:012d}", model)
+        self._refs_issued += 1
         meta = TxMetadata(client_id=client,
                           signature=tuple(float(s) for s in np.ravel(sig)[:16]),
                           model_accuracy=float(accuracy),
@@ -197,6 +252,7 @@ class DagAflCoordinator:
         self._client_rounds[client] += 1
         self._client_val[client] = acc
         self._rounds_done += 1
+        self._t_last_round = self.loop.now
         # publisher monitors per GLOBAL round (n_clients publishes) by
         # validating the AGGREGATED tip model on every client's val set
         # — the same quantity the sync baselines track; per-client local
@@ -219,17 +275,13 @@ class DagAflCoordinator:
         epoch = self._client_rounds[client]
 
         n_evals_before = self._evals_total
-        batch_fn = None
-        if self.cohort is not None:
-            batch_fn = lambda ids: self._evaluate_tips_batch(client, ids)
-        scores = select_tips(self.ledger, client, epoch, self.loop.now,
-                             lambda t: self._evaluate_tip(client, t),
-                             self.contract, cfgc.tip, round_idx=epoch,
-                             evaluate_batch=batch_fn)
+        req = TipSelectionRequest(client_id=client, cur_epoch=epoch,
+                                  now=self.loop.now, round_idx=epoch)
+        scores = self.selector.select(req, _ClientTipEvaluator(self, client))
         n_evals = self._evals_total - n_evals_before
         t_select = cost.eval_time(prof, n_evals) + cost.chain_op * len(scores)
 
-        refs = [self.ledger.nodes[s.tx_id].model_ref for s in scores]
+        refs = [self.ledger.get_tx(s.tx_id).model_ref for s in scores]
         t_fetch = sum(cost.transfer_time(prof, cost.model_bytes)
                       for _ in refs)
         if cfgc.verify_paths and scores:
@@ -240,7 +292,7 @@ class DagAflCoordinator:
             t_fetch += cost.chain_op * len(path.records)
 
         if not refs:
-            refs = [self.ledger.nodes[self.ledger.genesis_id].model_ref]
+            refs = [self.ledger.get_tx(self.ledger.genesis_id).model_ref]
         parents = tuple(s.tx_id for s in scores) or (self.ledger.genesis_id,)
         return refs, parents, epoch, t_select + t_fetch
 
@@ -364,7 +416,8 @@ class DagAflCoordinator:
     def global_model(self):
         """Average of the models at the current tips (publisher's view)."""
         tips = self.ledger.tips()
-        models = [self.store.get(self.ledger.nodes[t].model_ref) for t in tips]
+        models = [self.store.get(self.ledger.get_tx(t).model_ref)
+                  for t in tips]
         return tree_mean(models) if models else None
 
     def run(self, init_key=None) -> RunResult:
@@ -377,6 +430,13 @@ class DagAflCoordinator:
                           model_accuracy=0.0, current_epoch=0,
                           validation_node_id=-1)
         self.ledger.add_genesis(meta, 0.0, ref)
+        if self.cfg.ledger_checkpoint_every > 0:
+            # simulated-clock checkpoint cadence: fold confirmed ancestry
+            # and evict its models while the run is in flight
+            self.loop.schedule_every(
+                self.cfg.ledger_checkpoint_every,
+                lambda: self.ledger.maybe_checkpoint(now=self.loop.now),
+                stop=lambda: self.tracker.done)
         for c in range(self.cfg.n_clients):
             # staggered joins: asynchrony from the first event on
             self._start_round(float(self.rng.uniform(0, 2.0)), c)
@@ -391,8 +451,12 @@ class DagAflCoordinator:
             tx = self.ledger.latest_of(c)
             if tx is None:
                 continue
-            latest_models.append(
-                self.store.get(self.ledger.nodes[tx].model_ref))
+            ref = (self._deferred_evict.get(c)
+                   if not self.ledger.has_tx(tx)
+                   else self.ledger.get_tx(tx).model_ref)
+            if ref is None or ref not in self.store:
+                continue
+            latest_models.append(self.store.get(ref))
         if self.cohort is not None and latest_models:
             client_accs = self.cohort.evaluate_many(latest_models,
                                                     self.global_test)
@@ -410,7 +474,10 @@ class DagAflCoordinator:
             name="DAG-AFL",
             final_accuracy=final_acc,
             best_accuracy=max(final_acc, self.tracker.best),
-            sim_time=self.tracker.converged_at or self.loop.now,
+            # last ROUND completion, not loop.now: trailing maintenance
+            # ticks (checkpoint cadence) are not training time
+            sim_time=(self.tracker.converged_at or self._t_last_round
+                      or self.loop.now),
             rounds=self._rounds_done,
             history=self.tracker.history,
             extra={

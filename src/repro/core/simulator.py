@@ -83,6 +83,25 @@ class EventLoop:
         heapq.heappush(self._heap, (t, self._seq, fn))
         self._seq += 1
 
+    def schedule_every(self, interval: float, fn: Callable[[], None],
+                       stop: Optional[Callable[[], bool]] = None) -> None:
+        """Recurring hook: run ``fn`` every ``interval`` simulated seconds
+        until ``stop()`` returns True (checked before each firing) or no
+        OTHER events remain — a maintenance cadence (e.g. ledger
+        checkpointing) must never keep an otherwise-drained simulation
+        alive.  Rides the simulated clock, not event counts."""
+        if interval <= 0.0:
+            raise ValueError(f"interval must be > 0, got {interval!r}")
+
+        def tick() -> None:
+            if stop is not None and stop():
+                return
+            fn()
+            if self._heap:                    # other work pending: re-arm
+                self.schedule(interval, tick)
+
+        self.schedule(interval, tick)
+
     def run(self, until: Optional[float] = None,
             stop: Optional[Callable[[], bool]] = None,
             max_events: int = 1_000_000) -> None:

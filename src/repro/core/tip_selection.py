@@ -16,14 +16,37 @@ The selection pipeline for client ``c`` choosing N tips:
 Eq. 2 as printed increases with dwell time, contradicting the paper's prose;
 ``literal_eq2=True`` reproduces the printed formula, the default implements
 the prose (see DESIGN.md).
+
+API
+---
+:class:`TipSelector` is the selection engine: construct it once per
+(ledger, contract, config) and call :meth:`TipSelector.select` with a
+:class:`TipSelectionRequest` and a :class:`TipEvaluator`.  The evaluator
+protocol unifies the old ``evaluate_fn`` / ``evaluate_batch`` callable pair:
+``evaluate(tx_id) -> accuracy`` validates one tip, ``warm(tx_ids)`` lets a
+vectorized backend validate a whole candidate set in one batched dispatch
+(the per-tip ``evaluate`` then serves from its cache).
+
+``select_tips(...)`` remains as a thin back-compat wrapper over the same
+engine.  .. deprecated:: its 9-positional-argument signature is frozen;
+new call sites should construct a :class:`TipSelector` — the wrapper will
+be removed once external callers have migrated.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
-from repro.core.dag import DAGLedger
+try:
+    from typing import Protocol, runtime_checkable
+except ImportError:  # pragma: no cover
+    Protocol = object
+
+    def runtime_checkable(cls):
+        return cls
+
+from repro.core.dag import LedgerView
 from repro.core.signature import SimilarityContract
 
 
@@ -36,6 +59,10 @@ class TipSelectionConfig:
     literal_eq2: bool = False    # reproduce the paper's printed Eq. 2
     use_freshness: bool = True
     use_similarity: bool = True  # ablation: disable signature pre-filter
+    # at large populations, consider only this many FRESHEST tips as
+    # candidates (served from the ledger's freshness-ordered tip index)
+    # instead of scanning the whole tip set; None = consider every tip
+    max_tip_candidates: Optional[int] = None
 
 
 def tipc(cur_epoch: int, tip_epoch: int) -> float:
@@ -63,7 +90,156 @@ class TipScore:
     score: float
 
 
-def select_tips(ledger: DAGLedger,
+@dataclass(frozen=True)
+class TipSelectionRequest:
+    """One client's selection query: who is asking, and when."""
+
+    client_id: int
+    cur_epoch: int
+    now: float
+    round_idx: int = 0
+
+
+@runtime_checkable
+class TipEvaluator(Protocol):
+    """Validates candidate tips on the requesting client's local data.
+
+    ``evaluate`` is the expensive per-tip step the similarity filter
+    minimises; ``warm`` receives each candidate set before the per-tip
+    loop so a vectorized backend can validate the whole set in one batched
+    dispatch and serve ``evaluate`` from its cache — the set of evaluated
+    tips (and therefore the simulated validation cost) is identical either
+    way.
+    """
+
+    def evaluate(self, tx_id: str) -> float: ...
+
+    def warm(self, tx_ids: Sequence[str]) -> None: ...
+
+
+class FnTipEvaluator:
+    """Adapter from the legacy ``evaluate_fn`` / ``evaluate_batch`` callable
+    pair to the :class:`TipEvaluator` protocol."""
+
+    def __init__(self, evaluate_fn: Callable[[str], float],
+                 evaluate_batch: Optional[
+                     Callable[[Sequence[str]], None]] = None):
+        self._fn = evaluate_fn
+        self._batch = evaluate_batch
+
+    def evaluate(self, tx_id: str) -> float:
+        return self._fn(tx_id)
+
+    def warm(self, tx_ids: Sequence[str]) -> None:
+        if self._batch is not None and tx_ids:
+            self._batch(tx_ids)
+
+
+class TipSelector:
+    """The paper's §III-B selection engine over a :class:`LedgerView`."""
+
+    def __init__(self, ledger: LedgerView,
+                 contract: Optional[SimilarityContract],
+                 cfg: TipSelectionConfig):
+        self.ledger = ledger
+        self.contract = contract
+        self.cfg = cfg
+
+    # -- candidate set -------------------------------------------------------
+
+    def _candidate_tips(self) -> List[str]:
+        cfg = self.cfg
+        if cfg.max_tip_candidates is None:
+            return self.ledger.tips()
+        # index-backed: only the k freshest tips are considered, served
+        # from the ledger's freshness-ordered tip index (sub-linear in the
+        # tip count for a BoundedDAGLedger); re-sorted by id so downstream
+        # iteration order matches the unrestricted path
+        return sorted(self.ledger.tips_by_freshness(cfg.max_tip_candidates))
+
+    def _fresh(self, req: TipSelectionRequest, tx_id: str) -> float:
+        cfg = self.cfg
+        if not cfg.use_freshness:
+            return 1.0
+        tx = self.ledger.get_tx(tx_id)
+        return freshness(req.cur_epoch, tx.metadata.current_epoch, req.now,
+                         tx.timestamp, cfg.alpha, cfg.literal_eq2)
+
+    # -- selection -----------------------------------------------------------
+
+    def select(self, req: TipSelectionRequest,
+               evaluator: TipEvaluator) -> List[TipScore]:
+        """Returns the selected tips with their diagnostic scores."""
+        ledger, cfg = self.ledger, self.cfg
+        all_tips = self._candidate_tips()
+        # a client never selects its OWN transactions: the paper's reachable
+        # set (Fig. 2) is peers who integrated your aggregate, and
+        # P2P-fetching your own model is a no-op that silos training
+        # (observed: self-selection via the accuracy rank costs ~10 accuracy
+        # points under beta=0.1)
+        tips = [t for t in all_tips
+                if ledger.get_tx(t).metadata.client_id != req.client_id]
+        if not tips:
+            tips = all_tips
+        n = min(cfg.n_select, len(tips))
+        if n == 0:
+            return []
+
+        start = ledger.latest_of(req.client_id)
+        # the split is restricted to the candidate set up front, so a
+        # freshness-capped selection never pays an all-tips scan
+        reachable, unreachable = ledger.reachable_tips(start, within=tips)
+
+        fresh = lambda t: self._fresh(req, t)  # noqa: E731
+
+        n1 = min(round(cfg.lam * n), len(reachable))
+        n2 = min(n - n1, len(unreachable))
+        n1 = min(n - n2, len(reachable))          # spill shortfall back
+
+        chosen: List[TipScore] = []
+
+        # -- reachable side: direct validation, freshness-weighted rank ----
+        evaluator.warm(reachable)
+        scored_r = []
+        for t in reachable:
+            acc = evaluator.evaluate(t)
+            f = fresh(t)
+            scored_r.append(TipScore(t, True, f, acc, f * acc))
+        scored_r.sort(key=lambda s: -s.score)
+        chosen.extend(scored_r[:n1])
+
+        # -- unreachable side: similarity pre-filter, then validate --------
+        if n2 > 0:
+            cands = list(unreachable)
+            if cfg.use_similarity and self.contract is not None:
+                owners = {t: ledger.get_tx(t).metadata.client_id
+                          for t in cands}
+                p = max(cfg.p_similar, n2)
+                owner_rank = self.contract.most_similar(
+                    req.round_idx, req.client_id,
+                    sorted(set(owners.values())), p)
+                rank_pos = {cid: i for i, cid in enumerate(owner_rank)}
+                cands.sort(
+                    key=lambda t: rank_pos.get(owners[t], len(rank_pos)))
+                cands = cands[:p]
+            evaluator.warm(cands)
+            scored_u = []
+            for t in cands:
+                acc = evaluator.evaluate(t)
+                f = fresh(t)
+                scored_u.append(TipScore(t, False, f, acc, f * acc))
+            scored_u.sort(key=lambda s: -s.accuracy)
+            chosen.extend(scored_u[:n2])
+
+        # -- top-up if still short (tiny DAGs) -----------------------------
+        if len(chosen) < n:
+            chosen.extend(top_up_tips(
+                chosen, tips, reachable, fresh, evaluator.evaluate,
+                lambda ids: evaluator.warm(ids), n))
+        return chosen
+
+
+def select_tips(ledger: LedgerView,
                 client_id: int,
                 cur_epoch: int,
                 now: float,
@@ -73,85 +249,18 @@ def select_tips(ledger: DAGLedger,
                 round_idx: int = 0,
                 evaluate_batch: Optional[
                     Callable[[Sequence[str]], None]] = None) -> List[TipScore]:
-    """Returns the selected tips with their diagnostic scores.
+    """Back-compat wrapper over :class:`TipSelector`.
 
-    ``evaluate_fn(tx_id) -> accuracy`` validates a tip's model on the calling
-    client's local validation data (the expensive step the similarity filter
-    minimises).  ``evaluate_batch(tx_ids)``, when provided, is called with
-    each candidate set before the per-tip loop so a vectorized backend can
-    validate the whole set in one batched dispatch and serve ``evaluate_fn``
-    from its cache — the set of evaluated tips (and therefore the simulated
-    validation cost) is identical either way.
+    .. deprecated::
+        Construct a :class:`TipSelector` and call :meth:`TipSelector.select`
+        with a :class:`TipSelectionRequest` and a :class:`TipEvaluator`
+        instead; this 9-argument signature is frozen and will be removed
+        once external callers have migrated.
     """
-    all_tips = ledger.tips()
-    # a client never selects its OWN transactions: the paper's reachable set
-    # (Fig. 2) is peers who integrated your aggregate, and P2P-fetching your
-    # own model is a no-op that silos training (observed: self-selection via
-    # the accuracy rank costs ~10 accuracy points under beta=0.1)
-    tips = [t for t in all_tips
-            if ledger.nodes[t].metadata.client_id != client_id]
-    if not tips:
-        tips = all_tips
-    n = min(cfg.n_select, len(tips))
-    if n == 0:
-        return []
-
-    start = ledger.latest_of(client_id)
-    reachable, unreachable = ledger.reachable_tips(start)
-    own = set(all_tips) - set(tips)
-    reachable = [t for t in reachable if t not in own]
-    unreachable = [t for t in unreachable if t not in own]
-
-    def fresh(tx_id: str) -> float:
-        tx = ledger.nodes[tx_id]
-        if not cfg.use_freshness:
-            return 1.0
-        return freshness(cur_epoch, tx.metadata.current_epoch, now,
-                         tx.timestamp, cfg.alpha, cfg.literal_eq2)
-
-    n1 = min(round(cfg.lam * n), len(reachable))
-    n2 = min(n - n1, len(unreachable))
-    n1 = min(n - n2, len(reachable))          # spill shortfall back
-
-    chosen: List[TipScore] = []
-
-    # -- reachable side: direct validation, freshness-weighted rank --------
-    if evaluate_batch is not None and reachable:
-        evaluate_batch(reachable)
-    scored_r = []
-    for t in reachable:
-        acc = evaluate_fn(t)
-        f = fresh(t)
-        scored_r.append(TipScore(t, True, f, acc, f * acc))
-    scored_r.sort(key=lambda s: -s.score)
-    chosen.extend(scored_r[:n1])
-
-    # -- unreachable side: similarity pre-filter, then validate ------------
-    if n2 > 0:
-        cands = list(unreachable)
-        if cfg.use_similarity and contract is not None:
-            owners = {t: ledger.nodes[t].metadata.client_id for t in cands}
-            p = max(cfg.p_similar, n2)
-            owner_rank = contract.most_similar(
-                round_idx, client_id, sorted(set(owners.values())), p)
-            rank_pos = {cid: i for i, cid in enumerate(owner_rank)}
-            cands.sort(key=lambda t: rank_pos.get(owners[t], len(rank_pos)))
-            cands = cands[:p]
-        if evaluate_batch is not None and cands:
-            evaluate_batch(cands)
-        scored_u = []
-        for t in cands:
-            acc = evaluate_fn(t)
-            f = fresh(t)
-            scored_u.append(TipScore(t, False, f, acc, f * acc))
-        scored_u.sort(key=lambda s: -s.accuracy)
-        chosen.extend(scored_u[:n2])
-
-    # -- top-up if still short (tiny DAGs) ----------------------------------
-    if len(chosen) < n:
-        chosen.extend(top_up_tips(chosen, tips, reachable, fresh,
-                                  evaluate_fn, evaluate_batch, n))
-    return chosen
+    selector = TipSelector(ledger, contract, cfg)
+    req = TipSelectionRequest(client_id=client_id, cur_epoch=cur_epoch,
+                              now=now, round_idx=round_idx)
+    return selector.select(req, FnTipEvaluator(evaluate_fn, evaluate_batch))
 
 
 def top_up_tips(chosen: Sequence[TipScore], tips: Sequence[str],

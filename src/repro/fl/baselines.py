@@ -59,6 +59,10 @@ class FLConfig:
     n_tiers: int = 3                     # fedat / csafl / fedhisyn clusters
     dagfl_n_select: int = 2
     consensus_overhead: float = 1.5      # scalesfl per-round committee cost
+    # DAG ledgers (dagfl / dagafl): > 0 switches to the bounded-frontier
+    # BoundedDAGLedger, checkpointing every this many simulated seconds
+    # (see DagAflConfig.ledger_checkpoint_every); 0 = append-only ledger
+    ledger_checkpoint_every: float = 0.0
 
 
 class _Harness:
@@ -436,6 +440,7 @@ def run_dagfl(backend, client_data, global_test, cfg: FLConfig,
         cohort_window=cfg.cohort_window, mesh=cfg.mesh,
         clients_axis=cfg.clients_axis, data_axis=cfg.data_axis,
         overlap=cfg.overlap,
+        ledger_checkpoint_every=cfg.ledger_checkpoint_every,
         tip=TipSelectionConfig(n_select=cfg.dagfl_n_select, lam=0.0,
                                use_freshness=False, use_similarity=False,
                                p_similar=max(cfg.n_clients, 8)))
@@ -458,6 +463,7 @@ def run_dagafl(backend, client_data, global_test, cfg: FLConfig,
         cohort_size=cfg.cohort_size, cohort_window=cfg.cohort_window,
         mesh=cfg.mesh, clients_axis=cfg.clients_axis,
         data_axis=cfg.data_axis, overlap=cfg.overlap,
+        ledger_checkpoint_every=cfg.ledger_checkpoint_every,
         tip=tip_cfg or TipSelectionConfig())
     coord = DagAflCoordinator(backend, client_data, global_test, dcfg,
                               cost, profiles)

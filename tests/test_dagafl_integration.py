@@ -70,3 +70,25 @@ def test_async_clients_progress_independently(setup):
     rounds = coord._client_rounds
     assert sum(rounds) == res.rounds
     assert max(rounds) >= 1
+
+
+def test_bounded_ledger_matches_unbounded_run(setup):
+    """Checkpoint+prune mid-run must not change the training trajectory:
+    same rounds, same simulated time, same final accuracy (verify_paths
+    off — stored paths are legitimately shorter on a pruned ledger, which
+    would shift only the simulated audit-cost term)."""
+    coord_u, res_u = run(setup, max_rounds=2, verify_paths=False)
+    coord_b, res_b = run(setup, max_rounds=2, verify_paths=False,
+                         ledger_checkpoint_every=5.0)
+    assert res_b.rounds == res_u.rounds
+    assert res_b.sim_time == pytest.approx(res_u.sim_time)
+    assert res_b.final_accuracy == pytest.approx(res_u.final_accuracy)
+    # the bounded run really pruned: checkpoints fired, bodies + models gone
+    assert coord_b.ledger.checkpoints
+    assert coord_b.ledger.n_pruned > 0
+    assert len(coord_b.ledger) < len(coord_u.ledger)
+    # pruned-while-latest refs are deferred (the final sweep needs them),
+    # so a tiny run may keep every model; it must never keep MORE
+    assert len(coord_b.store) <= len(coord_u.store)
+    ok, reason = verify_full_dag(coord_b.ledger)
+    assert ok, reason

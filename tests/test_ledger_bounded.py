@@ -1,0 +1,355 @@
+"""BoundedDAGLedger: checkpoint+prune equivalence, indexes, verification.
+
+The load-bearing property (DESIGN.md): folding confirmed ancestry into a
+checkpoint and evicting its bodies must be INVISIBLE to every consumer —
+tips, reachability splits, tip selection, and path-verification verdicts
+all agree with the append-only reference ledger, at any checkpoint cadence.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dag import (GENESIS_ROOT, BoundedDAGLedger, CheckpointRecord,
+                            DAGLedger, LedgerView, TxMetadata)
+from repro.core.tip_selection import TipSelectionConfig, select_tips
+from repro.core.verify import (IncrementalVerifier, extract_path,
+                               verify_checkpoints, verify_full_dag,
+                               verify_path)
+
+
+def meta(cid=0, epoch=0):
+    return TxMetadata(client_id=cid, signature=(0.1, 0.2),
+                      model_accuracy=0.5, current_epoch=epoch,
+                      validation_node_id=cid)
+
+
+N_CLIENTS = 6
+
+
+def twin_drive(ops, seed=0, **bounded_kw):
+    """Apply one append sequence to a full and a bounded ledger; ``ops`` is
+    [(client_id, extra_parents, ckpt_gate)] — ckpt_gate == 0 checkpoints the
+    bounded ledger after that append.  Returns (full, bounded, evicted_ids).
+    """
+    evicted = []
+    full = DAGLedger()
+    bnd = BoundedDAGLedger(evict_fn=lambda tx: evicted.append(tx.tx_id),
+                           **bounded_kw)
+    full.add_genesis(meta(-1, 0))
+    bnd.add_genesis(meta(-1, 0))
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for cid, extra, ck in ops:
+        t += 1.0
+        tips = full.tips()
+        k = min(len(tips), 1 + extra)
+        parents = [str(p) for p in rng.choice(tips, size=k, replace=False)]
+        m = meta(cid, int(t))
+        full.add_transaction(m, parents, t)
+        bnd.add_transaction(m, parents, t)
+        if ck == 0:
+            bnd.maybe_checkpoint(now=t)
+    return full, bnd, evicted
+
+
+def _eval_fn(tx_id):
+    return (int(tx_id[2:]) % 11) / 11.0 + 0.01
+
+
+OPS = st.lists(st.tuples(st.integers(0, N_CLIENTS - 1), st.integers(0, 1),
+                         st.integers(0, 3)), min_size=1, max_size=60)
+
+
+# -- pruning-equivalence properties ------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(OPS)
+def test_prune_preserves_tips(ops):
+    full, bnd, evicted = twin_drive(ops)
+    assert bnd.tips() == full.tips()
+    assert bnd.tips_by_freshness(3) == full.tips_by_freshness(3)
+    # pruned bodies are really gone, and exactly the evicted ones
+    assert len(bnd) + bnd.n_pruned == len(full)
+    assert set(evicted) == {t for t in full.nodes if not bnd.has_tx(t)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(OPS)
+def test_prune_preserves_reachability_split(ops):
+    """Alg. 1 parity for every client start — including starts whose body
+    was pruned (confirmed => every tip transitively approves them)."""
+    full, bnd, _ = twin_drive(ops)
+    for cid in range(-1, N_CLIENTS):
+        start = full.latest_of(cid)
+        assert bnd.latest_of(cid) == start
+        assert bnd.reachable_tips(start) == full.reachable_tips(start)
+
+
+@settings(max_examples=20, deadline=None)
+@given(OPS)
+def test_prune_preserves_selection(ops):
+    full, bnd, _ = twin_drive(ops)
+    cfg = TipSelectionConfig(n_select=2, use_similarity=False)
+    for cid in range(N_CLIENTS):
+        a = select_tips(full, cid, 3, 100.0, _eval_fn, None, cfg)
+        b = select_tips(bnd, cid, 3, 100.0, _eval_fn, None, cfg)
+        assert [(s.tx_id, s.reachable, s.score) for s in a] == \
+            [(s.tx_id, s.reachable, s.score) for s in b]
+
+
+@settings(max_examples=20, deadline=None)
+@given(OPS)
+def test_prune_preserves_verification_verdicts(ops):
+    """A trainer's stored path (extracted pre-prune, from the full ledger)
+    still verifies against the pruned publisher state, and both full-DAG
+    audits pass."""
+    full, bnd, _ = twin_drive(ops)
+    assert verify_full_dag(full) == (True, "ok")
+    assert verify_full_dag(bnd) == (True, "ok")
+    for tip in full.tips():
+        path = extract_path(full, tip)        # crosses the pruned region
+        assert verify_path(full, path) == (True, "ok")
+        assert verify_path(bnd, path) == (True, "ok")
+
+
+@settings(max_examples=15, deadline=None)
+@given(OPS)
+def test_bfs_fallback_matches_summaries(ops):
+    """max_summaries=0 disables the incremental index entirely; the BFS
+    fallback must produce identical splits."""
+    full, bnd, _ = twin_drive(ops, max_summaries=0)
+    assert bnd.stat_reach_bfs == 0            # nothing queried yet
+    for cid in range(N_CLIENTS):
+        start = full.latest_of(cid)
+        assert bnd.reachable_tips(start) == full.reachable_tips(start)
+    if any(full.latest_of(c) and bnd.has_tx(full.latest_of(c))
+           for c in range(N_CLIENTS)):
+        assert bnd.stat_reach_bfs > 0         # fallback actually exercised
+
+
+@settings(max_examples=15, deadline=None)
+@given(OPS)
+def test_summary_cap_overflow_still_correct(ops):
+    """summary_cap=1 drops every summary after first use; correctness must
+    not depend on the cache."""
+    full, bnd, _ = twin_drive(ops, summary_cap=1)
+    for _ in range(2):                        # second pass hits dropped state
+        for cid in range(N_CLIENTS):
+            start = full.latest_of(cid)
+            assert bnd.reachable_tips(start) == full.reachable_tips(start)
+
+
+# -- checkpoint structure -----------------------------------------------------
+
+
+def chain(led, n, cid_mod=3):
+    prev = led.genesis_id
+    for i in range(n):
+        prev = led.add_transaction(meta(i % cid_mod, i), [prev],
+                                   float(i + 1)).tx_id
+    return prev
+
+
+def test_checkpoint_folds_confirmed_ancestry():
+    bnd = BoundedDAGLedger()
+    bnd.add_genesis(meta(-1))
+    tip = chain(bnd, 10)
+    rec = bnd.checkpoint(now=10.0)
+    # a 1-wide chain: everything but the single tip is confirmed
+    assert rec is not None and rec.n_pruned == 10
+    assert bnd.tips() == [tip]
+    assert len(bnd) == 1 and bnd.n_pruned == 10
+    assert bnd.is_pruned(bnd.genesis_id)
+    assert rec.prev_root == GENESIS_ROOT
+    assert verify_checkpoints(bnd) == (True, "ok")
+    # second fold chains onto the first root
+    prev = tip
+    for i in range(3):
+        prev = bnd.add_transaction(meta(i, 10 + i), [prev],
+                                   float(11 + i)).tx_id
+    rec2 = bnd.checkpoint(now=14.0)
+    assert rec2.prev_root == rec.root
+    assert [r.seq for r in bnd.checkpoints] == [0, 1]
+
+
+def test_checkpoint_noop_when_nothing_confirmed():
+    bnd = BoundedDAGLedger()
+    bnd.add_genesis(meta(-1))
+    # genesis is itself a tip: it has no PROPER ancestors, nothing confirms
+    assert bnd.checkpoint(now=1.0) is None
+    assert bnd.checkpoints == ()
+
+
+def test_genesis_is_confirmed_once_all_tips_approve_it():
+    bnd = BoundedDAGLedger()
+    bnd.add_genesis(meta(-1))
+    g = bnd.genesis_id
+    bnd.add_transaction(meta(0, 1), [g], 1.0)
+    bnd.add_transaction(meta(1, 1), [g], 1.0)
+    rec = bnd.checkpoint(now=2.0)
+    assert rec is not None and rec.leaf_ids == (g,)
+    assert bnd.is_pruned(g)
+
+
+def test_auto_checkpoint_interval():
+    bnd = BoundedDAGLedger(checkpoint_interval=4)
+    bnd.add_genesis(meta(-1))
+    chain(bnd, 12)
+    assert bnd.checkpoints                       # fired without manual calls
+    assert bnd.n_pruned > 0
+
+
+def test_maybe_checkpoint_min_appends():
+    bnd = BoundedDAGLedger()
+    bnd.add_genesis(meta(-1))
+    chain(bnd, 3)
+    assert bnd.maybe_checkpoint(now=1.0) is not None
+    assert bnd.maybe_checkpoint(now=2.0) is None      # nothing appended since
+
+
+def test_pruned_parent_still_approvable():
+    """Async publish lag: a client may publish approving a tip that was
+    confirmed+pruned in between selection and publish."""
+    bnd = BoundedDAGLedger()
+    bnd.add_genesis(meta(-1))
+    tip = chain(bnd, 4)
+    pruned_parent = bnd.get_tx(tip).parents[0]
+    bnd.checkpoint(now=5.0)
+    assert bnd.is_pruned(pruned_parent)
+    tx = bnd.add_transaction(meta(5, 9), [pruned_parent], 6.0)
+    assert tx.tx_id in bnd.tips()
+    assert verify_full_dag(bnd) == (True, "ok")
+
+
+# -- tamper detection across the pruned boundary ------------------------------
+
+
+def _pruned_setup():
+    bnd = BoundedDAGLedger()
+    bnd.add_genesis(meta(-1))
+    tip = chain(bnd, 8)
+    path = extract_path(bnd, tip)                # stored BEFORE the prune
+    bnd.checkpoint(now=9.0)
+    victim = path.records[-2].tx_id              # deep in the pruned region
+    assert bnd.is_pruned(victim)
+    return bnd, path, victim
+
+
+def test_tampered_checkpoint_hash_detected_by_path():
+    bnd, path, victim = _pruned_setup()
+    assert verify_path(bnd, path) == (True, "ok")
+    bnd._tamper_pruned_hash(victim, "f" * 64)
+    ok, reason = verify_path(bnd, path)
+    # surfaces at the victim or at its child (whose Eq. 7 recompute pulls
+    # the tampered retained parent hash) — either way the path is rejected
+    assert not ok and "hash mismatch" in reason
+
+
+def test_tampered_checkpoint_hash_detected_by_audit():
+    bnd, _, victim = _pruned_setup()
+    assert verify_checkpoints(bnd) == (True, "ok")
+    bnd._tamper_pruned_hash(victim, "f" * 64)
+    ok, reason = verify_checkpoints(bnd)
+    assert not ok and "re-derive" in reason
+    assert verify_full_dag(bnd)[0] is False
+
+
+def test_forged_path_record_detected():
+    """A path record claiming different metadata for a pruned tx cannot
+    re-derive its own recorded hash."""
+    import dataclasses
+    bnd, path, _ = _pruned_setup()
+    i = len(path.records) - 2
+    path.records[i] = dataclasses.replace(path.records[i],
+                                          metadata_digest="00" * 32)
+    ok, reason = verify_path(bnd, path)
+    assert not ok
+
+
+# -- incremental verifier -----------------------------------------------------
+
+
+def test_incremental_verifier_audits_only_new():
+    led = DAGLedger()
+    led.add_genesis(meta(-1))
+    chain(led, 5)
+    v = IncrementalVerifier(led)
+    assert v.audit() == (True, "ok")
+    assert v.txs_checked == 6                  # genesis + 5
+    assert v.audit() == (True, "ok")
+    assert v.txs_checked == 6                  # steady state: nothing new
+    chain(led, 2, cid_mod=2)
+    assert v.audit() == (True, "ok")
+    assert v.txs_checked == 8                  # only the two appends
+
+
+def test_incremental_verifier_detects_new_tamper():
+    led = DAGLedger()
+    led.add_genesis(meta(-1))
+    chain(led, 3)
+    v = IncrementalVerifier(led)
+    assert v.audit() == (True, "ok")
+    tip = chain(led, 1)
+    led.nodes[tip].tx_hash = "0" * 64
+    ok, _ = v.audit()
+    assert not ok
+
+
+def test_incremental_verifier_covers_checkpoints():
+    bnd = BoundedDAGLedger()
+    bnd.add_genesis(meta(-1))
+    chain(bnd, 6)
+    v = IncrementalVerifier(bnd)
+    assert v.audit() == (True, "ok")
+    bnd.checkpoint(now=7.0)
+    chain(bnd, 2, cid_mod=2)
+    assert v.audit() == (True, "ok")
+    assert v.checkpoints_checked == 1
+    chain(bnd, 2, cid_mod=2)
+    bnd.checkpoint(now=12.0)
+    leaf = bnd.checkpoints[-1].leaf_ids[0]
+    bnd._tamper_pruned_hash(leaf, "e" * 64)
+    ok, _ = v.audit()
+    assert not ok
+
+
+# -- tx-id ordering regression ------------------------------------------------
+
+
+def test_tx_ids_keep_lexicographic_order_past_one_million():
+    """Regression: 6-digit padding made tx1000000 sort BEFORE tx999999,
+    breaking every sorted-id iteration at the boundary."""
+    led = DAGLedger()
+    led.add_genesis(meta(-1))
+    led._counter = 999_999
+    a = led.add_transaction(meta(0, 1), [led.genesis_id], 1.0)
+    b = led.add_transaction(meta(1, 1), [led.genesis_id], 2.0)
+    c = led.add_transaction(meta(2, 1), [led.genesis_id], 3.0)
+    assert a.tx_id < b.tx_id < c.tx_id          # lexicographic == insertion
+    assert [a.tx_id, b.tx_id, c.tx_id] == sorted([b.tx_id, a.tx_id, c.tx_id])
+    assert led.tips() == [a.tx_id, b.tx_id, c.tx_id]
+    assert a.seq == 999_999 and b.seq == 1_000_000
+
+
+# -- LedgerView conformance ---------------------------------------------------
+
+
+@pytest.mark.parametrize("cls", [DAGLedger, BoundedDAGLedger])
+def test_ledger_view_conformance(cls):
+    led = cls()
+    led.add_genesis(meta(-1))
+    assert isinstance(led, LedgerView)
+    g = led.genesis_id
+    assert led.has_tx(g) and led.get_tx(g).tx_id == g
+    assert led.hash_of(g) == led.get_tx(g).tx_hash
+    assert not led.is_pruned(g)
+    assert [tx.tx_id for tx in led.transactions()] == [g]
+    assert isinstance(led.checkpoints, tuple)
+    assert len(led) == 1
+
+
+def test_checkpoint_record_is_immutable():
+    with pytest.raises(Exception):
+        rec = CheckpointRecord("c", 0, 0.0, 1, "r", "p", ("t",))
+        rec.root = "x"

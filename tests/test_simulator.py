@@ -117,3 +117,32 @@ def test_cost_model_scales_with_profile():
     p_slow = ClientProfile(1, speed=2.0, bandwidth=1e6, latency=0.01)
     assert cm.train_time(p_slow, 5, rng) > cm.train_time(p_fast, 5, rng)
     assert cm.transfer_time(p_slow, 10**7) > cm.transfer_time(p_fast, 10**7)
+
+
+def test_schedule_every_recurring_until_stop():
+    loop = EventLoop()
+    fired = []
+    loop.schedule_every(2.0, lambda: fired.append(loop.now),
+                        stop=lambda: len(fired) >= 3)
+    loop.schedule(100.0, lambda: None)       # keep the heap alive past stop
+    loop.run()
+    assert fired == [2.0, 4.0, 6.0]          # 4th tick sees stop() and ends
+
+
+def test_schedule_every_rejects_nonpositive_interval():
+    import pytest
+    loop = EventLoop()
+    with pytest.raises(ValueError):
+        loop.schedule_every(0.0, lambda: None)
+
+
+def test_schedule_every_drains_with_the_heap():
+    """The recurring tick must not keep an otherwise-finished simulation
+    alive: once no other events remain, it stops re-arming."""
+    loop = EventLoop()
+    fired = []
+    loop.schedule_every(1.0, lambda: fired.append(loop.now))
+    loop.schedule(2.5, lambda: None)         # last piece of real work
+    loop.run()
+    assert fired == [1.0, 2.0, 3.0]          # tick at 3.0 sees an empty heap
+    assert loop.now == 3.0

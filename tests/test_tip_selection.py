@@ -180,3 +180,70 @@ def test_top_up_skips_already_chosen():
     out = top_up_tips(chosen, ["a", "b"], [], lambda t: 1.0,
                       lambda t: 0.5, None, 2)
     assert [s.tx_id for s in out] == ["b"]
+
+
+# -- redesigned API: TipSelector / TipSelectionRequest / TipEvaluator --------
+
+
+def test_selector_matches_legacy_wrapper():
+    """The back-compat select_tips wrapper and the TipSelector engine must
+    produce identical selections (the wrapper IS the engine)."""
+    from repro.core.tip_selection import (FnTipEvaluator, TipSelectionRequest,
+                                          TipSelector)
+    led, mine, reach_tip, unreach = _setup(n_other=5)
+    accs = {t.tx_id: 0.4 + 0.05 * i for i, t in enumerate(unreach)}
+    accs[reach_tip.tx_id] = 0.9
+    fn = lambda t: accs.get(t, 0.1)  # noqa: E731
+    cfg = TipSelectionConfig(n_select=2, lam=0.5, use_similarity=False)
+
+    legacy = select_tips(led, 0, 2, 3.0, fn, None, cfg)
+    sel = TipSelector(led, None, cfg)
+    req = TipSelectionRequest(client_id=0, cur_epoch=2, now=3.0, round_idx=0)
+    new = sel.select(req, FnTipEvaluator(fn))
+    assert [(s.tx_id, s.reachable, s.score) for s in legacy] == \
+        [(s.tx_id, s.reachable, s.score) for s in new]
+
+
+def test_fn_evaluator_satisfies_protocol():
+    from repro.core.tip_selection import FnTipEvaluator, TipEvaluator
+    ev = FnTipEvaluator(lambda t: 0.5)
+    assert isinstance(ev, TipEvaluator)
+    ev.warm(["a"])                             # no batch fn: silently a no-op
+    assert ev.evaluate("x") == 0.5
+
+
+def test_fn_evaluator_routes_batch():
+    from repro.core.tip_selection import FnTipEvaluator
+    warmed = []
+    ev = FnTipEvaluator(lambda t: 0.5, lambda ids: warmed.extend(ids))
+    ev.warm([])                                # empty: batch not dispatched
+    ev.warm(["a", "b"])
+    assert warmed == ["a", "b"]
+
+
+def test_max_tip_candidates_restricts_to_freshest():
+    """The index-backed candidate cap considers only the k freshest tips;
+    stale tips are invisible to selection."""
+    from repro.core.tip_selection import (FnTipEvaluator, TipSelectionRequest,
+                                          TipSelector)
+    led = DAGLedger()
+    led.add_genesis(meta(-1, 0))
+    g = led.genesis_id
+    stale = led.add_transaction(meta(1, 1), [g], 1.0)
+    fresh_tips = [led.add_transaction(meta(2 + i, 1), [g], 10.0 + i)
+                  for i in range(3)]
+    cfg = TipSelectionConfig(n_select=2, use_similarity=False,
+                             max_tip_candidates=2)
+    sel = TipSelector(led, None, cfg)
+    req = TipSelectionRequest(client_id=0, cur_epoch=1, now=20.0)
+    chosen = sel.select(req, FnTipEvaluator(lambda t: 0.5))
+    ids = {s.tx_id for s in chosen}
+    assert stale.tx_id not in ids
+    assert ids <= {t.tx_id for t in fresh_tips[-2:]}
+
+
+def test_request_is_frozen():
+    from repro.core.tip_selection import TipSelectionRequest
+    req = TipSelectionRequest(client_id=0, cur_epoch=1, now=2.0)
+    with pytest.raises(Exception):
+        req.now = 5.0
