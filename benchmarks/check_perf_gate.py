@@ -57,6 +57,29 @@ Ledger day-in-the-life (``kind: ledger_day``):
 
 The ledger gate is wall-clock-free by construction — every gated quantity
 is an event count, so a loaded CI runner cannot flake it.
+
+Robustness suite (``kind: robustness``, written by
+``benchmarks/robustness.py``), per scenario under the ``robustness``
+thresholds sub-dict:
+
+  * deterministic event counts — the scenario's primary fault counter must
+    be nonzero AND the same-seed rerun must report identical counts and
+    tamper-detection sets (``determinism`` leg).
+  * ``accuracy_delta_max``    — DAG-AFL's honest-vs-attacked accuracy drop
+                                (honest clients' models) must stay under the
+                                per-scenario floor.
+  * ``poison_advantage_min``  — (poison only) fedavg's AND fedasync's
+                                accuracy delta must exceed DAG-AFL's by at
+                                least this margin: the DAG defense must
+                                demonstrably beat the defenseless baselines.
+  * ``poisoned_tip_approval_rate_max`` — (poison only) how often honest tip
+                                selection approved a malicious tx.
+  * tamper detection          — (poison only) nonzero tampered txs, every
+                                one detected by the Eq. 7 sweep, and the
+                                incremental verifier flagged the ledger.
+
+Accuracy-DELTA floors are gated (a run-to-run borderline flip moves both
+legs of the subtraction together at fixed seeds); wall-clock never is.
 """
 from __future__ import annotations
 
@@ -113,10 +136,86 @@ def check_ledger(results: dict, thresholds: dict) -> list:
     return failures
 
 
+# each scenario's primary fault counter (mirrors
+# benchmarks/robustness.py EVENT_KEYS; duplicated so the gate stays
+# importable without the repro package)
+ROBUSTNESS_EVENT_KEYS = {
+    "poison": "updates_scaled", "lazy": "updates_lazy",
+    "dp": "updates_noised", "straggler": "straggler_draws",
+    "dropout": "publishes_dropped",
+}
+
+
+def check_robustness(results: dict, thresholds: dict) -> list:
+    """Gate a ``kind=robustness`` results file (see module docstring)."""
+    failures = []
+    t = thresholds.get("robustness", {})
+    for name, s in results.get("scenarios", {}).items():
+        st = t.get(name, {})
+        counts = s.get("counts", {})
+        event_key = ROBUSTNESS_EVENT_KEYS.get(name)
+        if event_key and counts.get(event_key, 0) < 1:
+            failures.append(f"{name}: no fault events injected "
+                            f"({event_key}=0) — the scenario did nothing")
+        det = s.get("determinism")
+        if t.get("determinism_required", True):
+            if det is None:
+                failures.append(f"{name}: no determinism leg (run without "
+                                "--no-determinism)")
+            elif not (det.get("counts_match")
+                      and det.get("detections_match")):
+                failures.append(f"{name}: same-seed rerun diverged "
+                                f"(counts_match={det.get('counts_match')}, "
+                                f"detections_match="
+                                f"{det.get('detections_match')})")
+        dag_delta = s["methods"]["dagafl"]["accuracy_delta"]
+        delta_max = st.get("accuracy_delta_max")
+        if delta_max is not None and dag_delta > delta_max:
+            failures.append(f"{name}: dagafl honest-vs-attacked delta "
+                            f"{dag_delta:.4f} above {delta_max:.4f}")
+        adv_min = st.get("poison_advantage_min")
+        if adv_min is not None:
+            for algo in ("fedavg", "fedasync"):
+                m = s["methods"].get(algo)
+                if m is None:
+                    failures.append(f"{name}: no {algo} comparison leg")
+                    continue
+                adv = m["accuracy_delta"] - dag_delta
+                if adv < adv_min:
+                    failures.append(
+                        f"{name}: dagafl advantage over {algo} "
+                        f"{adv:.4f} below {adv_min:.4f} (the DAG defense "
+                        f"must beat the defenseless baseline)")
+        dag = s.get("dag", {})
+        rate_max = st.get("poisoned_tip_approval_rate_max")
+        if rate_max is not None:
+            rate = dag.get("poisoned_tip_approval_rate", 1.0)
+            if rate > rate_max:
+                failures.append(f"{name}: poisoned-tip approval rate "
+                                f"{rate:.4f} above {rate_max:.4f}")
+        if st.get("require_tamper_detection"):
+            if dag.get("txs_tampered", 0) < 1:
+                failures.append(f"{name}: no txs were tampered — the Eq. 7 "
+                                "audit was never exercised")
+            if not dag.get("detections_exact"):
+                failures.append(f"{name}: Eq. 7 sweep did not return "
+                                f"exactly the tampered set "
+                                f"(tampered={dag.get('txs_tampered')}, "
+                                f"detected={dag.get('tamper_detections')})")
+            if not dag.get("incremental_audit_flagged"):
+                failures.append(f"{name}: IncrementalVerifier did not flag "
+                                "the tampered ledger")
+    if not results.get("scenarios"):
+        failures.append("results carry no scenarios")
+    return failures
+
+
 def check(results: dict, thresholds: dict, quick: bool = False) -> list:
     """Returns a list of failure strings (empty = gate passes)."""
     if results.get("kind") == "ledger_day":
         return check_ledger(results, thresholds)
+    if results.get("kind") == "robustness":
+        return check_robustness(results, thresholds)
     failures = []
     thresholds = active_thresholds(thresholds, results)
     floor = thresholds["cohort_speedup_min"]
@@ -182,6 +281,23 @@ def main() -> None:
               f"audit_tx_ratio="
               f"{results.get('audit_tx_ratio', float('nan')):.2f} "
               f"verify_ok={results.get('verify_ok')}")
+        if failures:
+            for msg in failures:
+                print(f"PERF GATE FAIL: {msg}", file=sys.stderr)
+            sys.exit(1)
+        print("perf gate: PASS")
+        return
+    if results.get("kind") == "robustness":
+        for name, s in results.get("scenarios", {}).items():
+            dagafl = s["methods"]["dagafl"]
+            det = s.get("determinism", {})
+            dag = s.get("dag", {})
+            print(f"perf gate[robustness/{name}]: "
+                  f"delta={dagafl['accuracy_delta']:+.3f} "
+                  f"approval={dag.get('poisoned_tip_approval_rate', 0):.3f} "
+                  f"tampered/detected={dag.get('txs_tampered', 0)}/"
+                  f"{dag.get('tamper_detections', 0)} "
+                  f"deterministic={bool(det.get('counts_match')) and bool(det.get('detections_match'))}")
         if failures:
             for msg in failures:
                 print(f"PERF GATE FAIL: {msg}", file=sys.stderr)

@@ -105,3 +105,28 @@ def rows(results) -> List[str]:
             out.append(f"table3_time[{setting}][{m}],"
                        f"{r['wall_s']*1e6:.0f},{r['sim_time']:.1f}")
     return out
+
+
+def robustness_rows(report) -> List[str]:
+    """CSV rows for a ``kind=robustness`` report
+    (benchmarks/robustness.py): per scenario x method the attacked accuracy
+    and the honest-vs-attacked delta (percentage points), plus the DAG
+    quarantine metrics for the dagafl legs."""
+    out = []
+    for name, s in report["scenarios"].items():
+        for m, r in s["methods"].items():
+            us = r["wall_s"] * 1e6
+            out.append(f"robust_acc[{name}][{m}],"
+                       f"{us:.0f},{r['attacked_accuracy']*100:.2f}")
+            out.append(f"robust_delta[{name}][{m}],"
+                       f"{us:.0f},{r['accuracy_delta']*100:.2f}")
+        dag = s.get("dag", {})
+        if dag:
+            us = s["methods"]["dagafl"]["wall_s"] * 1e6
+            out.append(f"robust_approval[{name}][dagafl],{us:.0f},"
+                       f"{dag['poisoned_tip_approval_rate']*100:.2f}")
+            out.append(f"robust_orphaned[{name}][dagafl],{us:.0f},"
+                       f"{dag['orphaned_malicious_frac']*100:.2f}")
+            out.append(f"robust_detections[{name}][dagafl],{us:.0f},"
+                       f"{dag['tamper_detections']}")
+    return out

@@ -1,0 +1,312 @@
+"""Robustness benchmark: the adversarial & systems-heterogeneity suite.
+
+Runs the fault-injection scenarios in ``repro.fl.scenarios.SCENARIOS``
+against DAG-AFL and (for the poison scenario) the fedavg/fedasync baselines,
+and emits a ``kind=robustness`` JSON report gated in CI by
+``benchmarks/check_perf_gate.py``.
+
+What each scenario measures
+---------------------------
+* ``attacked_accuracy`` is the accuracy experienced by the clients NOT
+  playing a hostile role: for the server baselines that is the global model
+  (honest clients have no choice but to absorb whatever the server
+  aggregated), for DAG-AFL it is the mean global-test accuracy of the
+  would-be-honest clients' latest published models.  The same client ids
+  are excluded from the honest reference run, so the honest-vs-attacked
+  delta isolates the attack, not the client subset.  This is exactly the
+  quarantine claim: DAG-AFL's tip selection validates candidate tips on
+  each client's own data, so poisoned lineages score near zero and honest
+  clients route around them, while a synchronous server average has no such
+  defense.
+* ``dag`` metrics quantify the quarantine structurally
+  (``poisoned_tip_approval_rate``, ``orphaned_malicious_frac`` — see
+  :func:`repro.fl.scenarios.dag_attack_metrics`) and exercise Eq. 7:
+  tampered metadata must be caught, exactly, by
+  :func:`repro.core.verify.detect_tampered` and flagged by the
+  :class:`repro.core.verify.IncrementalVerifier`.
+* ``determinism`` reruns the attacked DAG-AFL leg with a fresh injector at
+  the same seed and requires identical fault-event counts and detection
+  sets.  Convergence tracking is disabled (patience >> max_rounds), so
+  every event count is a pure function of the seed — the gate pins counts,
+  never accuracies or wall-clock.
+
+Usage::
+
+  python benchmarks/robustness.py --quick                      # full matrix
+  python benchmarks/robustness.py --quick --scenario poison    # one scenario
+  python benchmarks/robustness.py --summarize experiments/fl/robustness.json
+
+``--summarize`` prints a GitHub-flavoured markdown table (CI posts it to
+``$GITHUB_STEP_SUMMARY``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from dataclasses import asdict, replace
+from typing import Dict, List, Optional
+
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (REPO_ROOT, os.path.join(REPO_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.chain_perf import _make_cnn_world  # noqa: E402
+
+SCENARIO_ORDER = ["poison", "lazy", "dp", "straggler", "dropout"]
+
+#: the scenario's primary event counter — the gate requires it nonzero
+EVENT_KEYS = {"poison": "updates_scaled", "lazy": "updates_lazy",
+              "dp": "updates_noised", "straggler": "straggler_draws",
+              "dropout": "publishes_dropped"}
+
+
+def _geometry(quick: bool) -> Dict:
+    if quick:
+        return dict(n_clients=8, n_samples=1600, max_rounds=3,
+                    local_epochs=1, cohort_size=4, cohort_window=2.0)
+    return dict(n_clients=12, n_samples=4000, max_rounds=5,
+                local_epochs=2, cohort_size=6, cohort_window=2.0)
+
+
+class _World:
+    """One shared (backend, data, cost, profiles) quintuple per report, so
+    every method and scenario sees identical shards and device speeds."""
+
+    def __init__(self, geo: Dict, seed: int):
+        from repro.core.simulator import CostModel, make_profiles
+        self.geo = geo
+        self.seed = seed
+        self.backend, self.client_data, self.test = _make_cnn_world(
+            geo["n_clients"], geo["n_samples"], geo["local_epochs"], seed)
+        self.cost_args = dict(local_epoch=6.0)
+        self._cost_cls = CostModel
+        self.profiles = make_profiles(geo["n_clients"], 1.0, seed)
+
+    def cost(self):
+        # fresh per run: CostModel.model_bytes is mutated by each harness
+        return self._cost_cls(**self.cost_args)
+
+
+def _run_dagafl(world: _World, scenario=None):
+    """One coordinator run; convergence tracking disabled so the event
+    stream (and every scenario counter) is a pure function of the seed."""
+    from repro.core.coordinator import DagAflConfig, DagAflCoordinator
+    geo = world.geo
+    cfg = DagAflConfig(
+        n_clients=geo["n_clients"], max_rounds=geo["max_rounds"],
+        local_epochs=geo["local_epochs"], seed=world.seed,
+        cohort_size=geo["cohort_size"], cohort_window=geo["cohort_window"],
+        target_accuracy=None, patience=10 ** 6, scenario=scenario)
+    t0 = time.time()
+    coord = DagAflCoordinator(world.backend, world.client_data, world.test,
+                              cfg, world.cost(), world.profiles)
+    res = coord.run()
+    return coord, res, time.time() - t0
+
+
+def _run_baseline(world: _World, algo: str, scenario=None):
+    from repro.fl import ALGORITHMS, FLConfig
+    geo = world.geo
+    cfg = FLConfig(
+        n_clients=geo["n_clients"], max_rounds=geo["max_rounds"],
+        local_epochs=geo["local_epochs"], seed=world.seed,
+        cohort_size=geo["cohort_size"], cohort_window=geo["cohort_window"],
+        target_accuracy=None, patience=10 ** 6, scenario=scenario)
+    t0 = time.time()
+    res = ALGORITHMS[algo](world.backend, world.client_data, world.test,
+                           cfg, world.cost(), world.profiles)
+    return res, time.time() - t0
+
+
+def _honest_client_mean(world: _World, coord, exclude) -> float:
+    """Mean global-test accuracy of the NON-excluded clients' latest
+    published models — what an honest participant actually ends up with."""
+    models = []
+    for c in range(world.geo["n_clients"]):
+        if c in exclude:
+            continue
+        tx = coord.ledger.latest_of(c)
+        if tx is None or not coord.ledger.has_tx(tx):
+            continue
+        ref = coord.ledger.get_tx(tx).model_ref
+        if ref in coord.store:
+            models.append(coord.store.get(ref))
+    if not models:
+        return 0.0
+    if coord.cohort is not None:
+        accs = coord.cohort.evaluate_many(models, world.test)
+    else:
+        accs = [world.backend.evaluate(m, world.test) for m in models]
+    return float(np.mean(accs))
+
+
+def _method_entry(honest_acc, attacked_acc, res, wall) -> Dict:
+    return {"honest_accuracy": honest_acc,
+            "attacked_accuracy": attacked_acc,
+            "accuracy_delta": honest_acc - attacked_acc,
+            "sim_time": res.sim_time, "rounds": res.rounds,
+            "wall_s": wall}
+
+
+def _verification_leg(coord, scenario) -> Dict:
+    """Eq. 7 audit of the attacked run's ledger: the counting sweep must
+    return EXACTLY the tampered set, and the incremental verifier must
+    flag the ledger iff tampering happened."""
+    from repro.core.verify import IncrementalVerifier, detect_tampered
+    detected = detect_tampered(coord.ledger)
+    iv_ok, _ = IncrementalVerifier(coord.ledger).audit()
+    return {"tamper_detections": len(detected),
+            "txs_tampered": len(scenario.tampered),
+            "detections_exact": sorted(detected) == sorted(scenario.tampered),
+            "incremental_audit_flagged": not iv_ok}
+
+
+def run_robustness(scenarios: Optional[List[str]] = None, quick: bool = True,
+                   seed: int = 0, out_dir: str = "experiments/fl",
+                   determinism: bool = True) -> Dict:
+    from repro.fl.scenarios import (SCENARIOS, Scenario, dag_attack_metrics)
+    names = scenarios or SCENARIO_ORDER
+    geo = _geometry(quick)
+    world = _World(geo, seed)
+    n = geo["n_clients"]
+
+    report = {"kind": "robustness", "quick": quick, "seed": seed, **geo,
+              "scenarios": {}}
+
+    # one honest DAG-AFL reference run, shared by every scenario; the
+    # baselines' honest runs only matter for poison, run lazily below
+    print(f"# robustness: honest dagafl reference "
+          f"(n={n}, rounds={geo['max_rounds']})", file=sys.stderr)
+    honest_coord, honest_res, honest_wall = _run_dagafl(world)
+    honest_baselines: Dict[str, tuple] = {}
+
+    for name in names:
+        cfg = replace(SCENARIOS[name], seed=seed)
+        sc = Scenario(cfg, n)
+        print(f"# robustness: scenario '{name}' "
+              f"(malicious={sorted(sc.malicious)}, lazy={sorted(sc.lazy)}, "
+              f"stragglers={sorted(sc.stragglers)})", file=sys.stderr)
+        coord, res, wall = _run_dagafl(world, scenario=sc)
+        honest_acc = _honest_client_mean(world, honest_coord, sc.malicious)
+        attacked_acc = _honest_client_mean(world, coord, sc.malicious)
+        entry = {
+            "config": asdict(cfg),
+            "methods": {"dagafl": _method_entry(honest_acc, attacked_acc,
+                                                res, wall)},
+            "counts": sc.counts(),
+            "dag": {**dag_attack_metrics(coord.ledger, sc),
+                    **_verification_leg(coord, sc)},
+        }
+
+        if name == "poison":
+            # the headline comparison: server baselines lack the defense
+            for algo in ("fedavg", "fedasync"):
+                if algo not in honest_baselines:
+                    honest_baselines[algo] = _run_baseline(world, algo)
+                hres, hwall = honest_baselines[algo]
+                ares, awall = _run_baseline(
+                    world, algo, scenario=Scenario(cfg, n))
+                entry["methods"][algo] = _method_entry(
+                    hres.final_accuracy, ares.final_accuracy, ares, awall)
+
+        if determinism:
+            sc2 = Scenario(cfg, n)
+            coord2, _, _ = _run_dagafl(world, scenario=sc2)
+            ver2 = _verification_leg(coord2, sc2)
+            entry["determinism"] = {
+                "counts_match": sc.counts() == sc2.counts(),
+                "detections_match":
+                    ver2["tamper_detections"] == entry["dag"][
+                        "tamper_detections"] and ver2["detections_exact"],
+                "counts_a": sc.counts(), "counts_b": sc2.counts(),
+            }
+        report["scenarios"][name] = entry
+
+    os.makedirs(out_dir, exist_ok=True)
+    fname = (f"robustness_{names[0]}.json" if len(names) == 1
+             else "robustness.json")
+    out_path = os.path.join(out_dir, fname)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# robustness report -> {out_path}", file=sys.stderr)
+    return report
+
+
+def summarize_markdown(report: Dict) -> str:
+    """GitHub-flavoured markdown scenario table for $GITHUB_STEP_SUMMARY."""
+    lines = ["## Robustness scenario suite",
+             "",
+             f"geometry: {report['n_clients']} clients x "
+             f"{report['max_rounds']} rounds, cohort_size="
+             f"{report['cohort_size']}, seed={report['seed']}, "
+             f"quick={report.get('quick')}",
+             "",
+             "| scenario | method | honest acc | attacked acc | delta |"
+             " approval rate | orphaned mal/honest | tampered/detected |"
+             " deterministic |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for name, s in report["scenarios"].items():
+        dag = s.get("dag", {})
+        det = s.get("determinism", {})
+        det_ok = ("yes" if det.get("counts_match")
+                  and det.get("detections_match") else
+                  ("NO" if det else "-"))
+        for method, m in s["methods"].items():
+            is_dag = method == "dagafl"
+            lines.append(
+                f"| {name} | {method} "
+                f"| {m['honest_accuracy']:.3f} "
+                f"| {m['attacked_accuracy']:.3f} "
+                f"| {m['accuracy_delta']:+.3f} "
+                f"| {dag.get('poisoned_tip_approval_rate', 0):.3f}"
+                f"{'' if is_dag else ' (n/a)'} "
+                f"| {dag.get('orphaned_malicious_frac', 0):.2f}/"
+                f"{dag.get('orphaned_honest_frac', 0):.2f}"
+                f"{'' if is_dag else ' (n/a)'} "
+                f"| {dag.get('txs_tampered', 0)}/"
+                f"{dag.get('tamper_detections', 0)}"
+                f"{'' if is_dag else ' (n/a)'} "
+                f"| {det_ok if is_dag else '-'} |")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    from repro.fl.scenarios import SCENARIOS
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized geometry (8 clients x 3 rounds)")
+    ap.add_argument("--scenario", action="append", default=None,
+                    choices=sorted(SCENARIOS),
+                    help="run only this scenario (repeatable; default: all)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-dir", default="experiments/fl")
+    ap.add_argument("--no-determinism", action="store_true",
+                    help="skip the same-seed rerun (faster local iteration; "
+                         "the CI gate requires the determinism leg)")
+    ap.add_argument("--summarize", metavar="JSON", default=None,
+                    help="print the markdown summary of an existing report "
+                         "and exit")
+    args = ap.parse_args()
+
+    if args.summarize:
+        with open(args.summarize) as f:
+            print(summarize_markdown(json.load(f)), end="")
+        return
+
+    report = run_robustness(scenarios=args.scenario, quick=args.quick,
+                            seed=args.seed, out_dir=args.out_dir,
+                            determinism=not args.no_determinism)
+    from benchmarks import fl_tables
+    print("name,us_per_call,derived")
+    for row in fl_tables.robustness_rows(report):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,7 +29,23 @@ def main() -> None:
                     help="also benchmark the mesh-sharded SPMD cohort "
                          "engine: N devices or CxD (2-D clients x data, "
                          "e.g. 4x2); 0 = skip")
+    ap.add_argument("--scenario", action="append", default=None,
+                    metavar="NAME",
+                    help="run ONLY the robustness suite for this scenario "
+                         "(repeatable; 'all' = the full matrix) — the same "
+                         "entrypoint CI's robustness job uses "
+                         "(benchmarks/robustness.py)")
     args = ap.parse_args()
+
+    if args.scenario:
+        from benchmarks import fl_tables, robustness
+        names = (None if "all" in args.scenario else args.scenario)
+        report = robustness.run_robustness(scenarios=names,
+                                           quick=not args.full)
+        print("name,us_per_call,derived")
+        for r in fl_tables.robustness_rows(report):
+            print(r)
+        return
 
     rows = []
 

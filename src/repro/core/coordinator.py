@@ -90,6 +90,11 @@ class DagAflConfig:
     # boundary, so the (smaller) simulated audit cost shifts timings.
     # 0 keeps the append-only reference ledger.
     ledger_checkpoint_every: float = 0.0
+    # fault injection: None (honest run), a repro.fl.scenarios.ScenarioConfig,
+    # a registry name ("poison", "lazy", ...) or a prebuilt Scenario instance
+    # (pass the instance to read its event counters after the run).  A
+    # scenario with all rates zero is bit-identical to scenario=None.
+    scenario: object = None
 
 
 def resolve_cohort_mesh(mesh, cohort_size: int, clients_axis: str = "clients",
@@ -126,6 +131,14 @@ class DagAflCoordinator:
         one compiled :class:`repro.fl.cohort.CohortBackend` across runs
         (jit caches live on the engine instance)."""
         self.backend = backend
+        self.scenario = None
+        if cfg.scenario is not None:
+            # lazy import: core stays importable without the fl package
+            from repro.fl.scenarios import as_scenario
+            self.scenario = as_scenario(cfg.scenario, cfg.n_clients)
+            # poisoned shards must exist BEFORE the cohort engine registers
+            # its train shards below
+            client_data = self.scenario.poison_data(client_data)
         self.client_data = client_data
         self.global_test = global_test
         self.cfg = cfg
@@ -218,7 +231,7 @@ class DagAflCoordinator:
             self._evals_total += 1
 
     def _publish(self, client: int, model, accuracy: float, sig, epoch: int,
-                 parents) -> None:
+                 parents) -> str:
         pending = self._deferred_evict.pop(client, None)
         if pending is not None:         # pruned-while-latest: safe to drop now
             self.store.evict(pending)
@@ -229,9 +242,10 @@ class DagAflCoordinator:
                           model_accuracy=float(accuracy),
                           current_epoch=epoch,
                           validation_node_id=client)
-        self.ledger.add_transaction(meta, parents, self.loop.now, ref)
+        tx = self.ledger.add_transaction(meta, parents, self.loop.now, ref)
         self.contract.post_signature(client, sig)
         self.contract.commit_round(epoch)
+        return tx.tx_id
 
     def _eval_global_on_vals(self, gm) -> List[float]:
         if self.cohort is not None:
@@ -248,7 +262,19 @@ class DagAflCoordinator:
     def _complete_round(self, client: int, model, acc: float, sig,
                         epoch: int, parents) -> None:
         """Publish at the round's simulated completion time (both paths)."""
-        self._publish(client, model, acc, sig, epoch, parents)
+        if self.scenario is not None and self.scenario.drops_publish(client):
+            # wireless dropout: the publish aborts mid-round — no tx, no
+            # signature post; the attempt still counts against max_rounds
+            # and the client retries with a fresh round
+            self._client_rounds[client] += 1
+            self._t_last_round = self.loop.now
+            if (not self.tracker.done
+                    and self._client_rounds[client] < self.cfg.max_rounds):
+                self._start_round(0.0, client)
+            return
+        tx_id = self._publish(client, model, acc, sig, epoch, parents)
+        if self.scenario is not None:
+            self.scenario.maybe_tamper(self.ledger, tx_id)
         self._client_rounds[client] += 1
         self._client_val[client] = acc
         self._rounds_done += 1
@@ -310,6 +336,10 @@ class DagAflCoordinator:
         seed = int(self.rng.integers(2 ** 31))
         t_train = self.cost.train_time(self.profiles[client],
                                        self.cfg.local_epochs, self.rng)
+        if self.scenario is not None:
+            # heavy-tailed straggler slowdown (x1.0 exactly for non-
+            # stragglers, so the honest trajectory keeps its bits)
+            t_train *= self.scenario.duration_multiplier(client)
         return {"client": client, "t_start": t_start, "refs": refs,
                 "parents": parents, "epoch": epoch, "t_front": t_front,
                 "t_train": t_train, "seed": seed}
@@ -324,6 +354,8 @@ class DagAflCoordinator:
         model, _ = self.backend.train_local(
             agg, self.client_data[client]["train"], seed=rd["seed"],
             epochs=self.cfg.local_epochs)
+        if self.scenario is not None:
+            model = self._scenario_update_one(client, agg, model)
         acc = self.backend.evaluate(model, self.client_data[client]["val"])
         sig = self.backend.signature(model, self.client_data[client]["train"])
         total = rd["t_front"] + rd["t_train"] + self._t_post(
@@ -332,6 +364,51 @@ class DagAflCoordinator:
             rd["t_start"] + total - self.loop.now,
             lambda: self._complete_round(client, model, acc, sig,
                                          rd["epoch"] + 1, rd["parents"]))
+
+    # -- fault injection (repro/fl/scenarios.py) -------------------------------
+
+    def _scenario_update_one(self, client: int, agg, model):
+        """Scenario update transform for ONE trained model (sequential path
+        and windows of one); injection happens BEFORE validation and the
+        signature so the published artefacts describe the attacked model."""
+        sc = self.scenario
+        plan = sc.update_plan([client])
+        if plan is not None and plan["affected"][0]:
+            from repro.fl.cohort import perturb_update
+            model = perturb_update(agg, model, plan, 0)
+        return self._scenario_stale(client, model)
+
+    def _scenario_stale(self, client: int, model):
+        """lazy_mode='stale' free-riders republish their previous model
+        (host-side swap; first publish has nothing to replay)."""
+        sc = self.scenario
+        if not sc.wants_stale(client):
+            return model
+        prev = self.ledger.latest_of(client)
+        if prev is not None and self.ledger.has_tx(prev):
+            ref = self.ledger.get_tx(prev).model_ref
+            if ref in self.store:
+                sc.updates_lazy += 1
+                return self.store.get(ref)
+        return model
+
+    def _scenario_update_cohort(self, rounds, agg_stacked, new_stacked):
+        """Scenario update transforms for a whole window: one vmapped jitted
+        program on the cohort engine; unaffected rows keep their exact bits
+        (see CohortBackend.perturb_cohort_stacked)."""
+        sc = self.scenario
+        clients = [rd["client"] for rd in rounds]
+        plan = sc.update_plan(clients)
+        if plan is not None:
+            new_stacked = self.cohort.perturb_cohort_stacked(
+                agg_stacked, new_stacked, plan)
+        stale = [k for k, c in enumerate(clients) if sc.wants_stale(c)]
+        if stale:
+            models = tree_unstack(new_stacked)
+            for k in stale:
+                models[k] = self._scenario_stale(clients[k], models[k])
+            new_stacked = tree_stack(models)
+        return new_stacked
 
     # -- sequential client round ---------------------------------------------
 
@@ -395,6 +472,9 @@ class DagAflCoordinator:
         val_sets = [self.client_data[rd["client"]]["val"] for rd in rounds]
         new_stacked, _ = self.cohort.train_cohort_stacked(
             agg_stacked, train_sets, seeds, epochs=cfgc.local_epochs)
+        if self.scenario is not None:
+            new_stacked = self._scenario_update_cohort(rounds, agg_stacked,
+                                                       new_stacked)
         val_accs = self.cohort.evaluate_cohort_stacked(new_stacked, val_sets)
         sigs = self.cohort.signature_cohort_stacked(new_stacked, train_sets)
         new_models = tree_unstack(new_stacked)
@@ -470,6 +550,10 @@ class DagAflCoordinator:
         # current tips (the paper's 'global model'); per-client average in
         # extra for reference
         final_acc = max(tip_mean_acc, client_mean)
+        extra_scenario = {}
+        if self.scenario is not None:
+            extra_scenario = {"scenario": self.scenario.cfg.name,
+                              "scenario_counts": self.scenario.counts()}
         return RunResult(
             name="DAG-AFL",
             final_accuracy=final_acc,
@@ -488,4 +572,5 @@ class DagAflCoordinator:
                 "verify_failures": self._verify_failures,
                 "store_bytes_transferred": self.store.bytes_transferred,
                 "cohorts_dispatched": self._cohorts_dispatched,
+                **extra_scenario,
             })

@@ -111,6 +111,26 @@ def verify_checkpoints(ledger: LedgerView) -> Tuple[bool, str]:
     return True, "ok"
 
 
+def detect_tampered(ledger: LedgerView) -> List[str]:
+    """Counting tamper sweep: re-derive Eq. 7 for EVERY live transaction
+    and return all ids whose stored hash does not re-derive (sorted for
+    determinism).  ``verify_full_dag`` stops at the first failure — the
+    robustness benchmark gates on exact detection counts, so it needs the
+    complete set.  Metadata tampering breaks only the victim's own hash
+    (children committed to the parent's stored tx_hash, which the attacker
+    left in place), so the sweep returns exactly the tampered set."""
+    bad = []
+    for tx in ledger.transactions():
+        try:
+            parent_hashes = [ledger.hash_of(p) for p in tx.parents]
+        except KeyError:
+            bad.append(tx.tx_id)
+            continue
+        if compute_tx_hash(parent_hashes, tx.metadata) != tx.tx_hash:
+            bad.append(tx.tx_id)
+    return sorted(bad)
+
+
 def verify_full_dag(ledger: LedgerView) -> Tuple[bool, str]:
     """Publisher-side audit: every stored hash must re-derive (Eq. 7),
     live transactions against parent hashes (retained ones for pruned

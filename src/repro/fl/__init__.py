@@ -1,16 +1,22 @@
 from repro.fl.backend import CNNBackend, LMBackend
-from repro.fl.baselines import (ALGORITHMS, FLConfig, run_centralized,
-                                run_csafl, run_dagafl, run_dagfl,
-                                run_fedasync, run_fedat, run_fedavg,
-                                run_fedhisyn, run_independent, run_scalesfl)
+from repro.fl.baselines import (ALGORITHMS, FLConfig, fedat_tier_weights,
+                                run_centralized, run_csafl, run_dagafl,
+                                run_dagfl, run_fedasync, run_fedat,
+                                run_fedavg, run_fedhisyn, run_independent,
+                                run_scalesfl)
 from repro.fl.cohort import (CNNCohortPrograms, CohortBackend, CohortPrograms,
                              LMCohortPrograms, build_cohort_engine,
-                             register_cohort_programs, resolve_cohort_mesh)
+                             perturb_update, register_cohort_programs,
+                             resolve_cohort_mesh)
+from repro.fl.scenarios import (SCENARIOS, Scenario, ScenarioConfig,
+                                as_scenario, dag_attack_metrics)
 
 __all__ = ["CNNBackend", "LMBackend", "ALGORITHMS", "FLConfig",
            "run_centralized", "run_independent", "run_fedavg", "run_fedasync",
            "run_fedat", "run_csafl", "run_fedhisyn", "run_scalesfl",
-           "run_dagfl", "run_dagafl",
+           "run_dagfl", "run_dagafl", "fedat_tier_weights",
            "CohortBackend", "CohortPrograms", "CNNCohortPrograms",
-           "LMCohortPrograms", "build_cohort_engine",
-           "register_cohort_programs", "resolve_cohort_mesh"]
+           "LMCohortPrograms", "build_cohort_engine", "perturb_update",
+           "register_cohort_programs", "resolve_cohort_mesh",
+           "SCENARIOS", "Scenario", "ScenarioConfig", "as_scenario",
+           "dag_attack_metrics"]

@@ -63,6 +63,11 @@ class FLConfig:
     # BoundedDAGLedger, checkpointing every this many simulated seconds
     # (see DagAflConfig.ledger_checkpoint_every); 0 = append-only ledger
     ledger_checkpoint_every: float = 0.0
+    # fault injection: None (honest), a repro.fl.scenarios.ScenarioConfig,
+    # a registry name or a prebuilt Scenario (see DagAflConfig.scenario) —
+    # the same scenarios attack the baselines and the DAG coordinator, so
+    # the robustness benchmark compares like with like
+    scenario: object = None
 
 
 class _Harness:
@@ -72,6 +77,12 @@ class _Harness:
                  cost=None, profiles=None):
         import jax
         self.backend = backend
+        self.scenario = None
+        self._last_submitted: Dict[int, object] = {}
+        if cfg.scenario is not None:
+            from repro.fl.scenarios import as_scenario
+            self.scenario = as_scenario(cfg.scenario, cfg.n_clients)
+            client_data = self.scenario.poison_data(client_data)
         self.client_data = client_data
         self.global_test = global_test
         self.cfg = cfg
@@ -101,15 +112,42 @@ class _Harness:
         return m
 
     def train(self, model, client: int):
-        return self.backend.train_local(
+        out = self.backend.train_local(
             model, self.client_data[client]["train"],
             seed=int(self.rng.integers(2 ** 31)),
             epochs=self.cfg.local_epochs)[0]
+        if self.scenario is not None:
+            out = self._scenario_update(client, model, out)
+        return out
+
+    def _scenario_update(self, client: int, base, new):
+        """Scenario fault injection on one submitted update (see
+        repro/fl/scenarios.py); lazy 'stale' free-riders resubmit whatever
+        they last handed the server."""
+        sc = self.scenario
+        plan = sc.update_plan([client])
+        if plan is not None and plan["affected"][0]:
+            from repro.fl.cohort import perturb_update
+            new = perturb_update(base, new, plan, 0)
+        if sc.wants_stale(client):
+            prev = self._last_submitted.get(client)
+            if prev is not None:
+                sc.updates_lazy += 1
+                new = prev
+            self._last_submitted[client] = new
+        return new
+
+    def drops(self, c: int) -> bool:
+        """Scenario wireless dropout for this client's current publish."""
+        return self.scenario is not None and self.scenario.drops_publish(c)
 
     def round_duration(self, c: int) -> float:
         """Simulated cost of one local round: train + up/down transfer."""
-        return (self.cost.train_time(self.profiles[c], self.cfg.local_epochs,
-                                     self.rng)
+        t_train = self.cost.train_time(self.profiles[c],
+                                       self.cfg.local_epochs, self.rng)
+        if self.scenario is not None:
+            t_train *= self.scenario.duration_multiplier(c)
+        return (t_train
                 + 2 * self.cost.transfer_time(self.profiles[c],
                                               self.cost.model_bytes))
 
@@ -140,6 +178,9 @@ class _Harness:
                 [model] * len(group),
                 [self.client_data[c]["train"] for c in group],
                 seeds, epochs=self.cfg.local_epochs)
+            if self.scenario is not None:
+                models = [self._scenario_update(c, model, m)
+                          for c, m in zip(group, models)]
             out.extend(models)
             durs.extend(self.round_duration(c) for c in group)
         return out, durs
@@ -224,7 +265,12 @@ def run_fedavg(backend, client_data, global_test, cfg: FLConfig,
     for r in range(cfg.max_rounds):
         locals_, durations = h.train_many(model, range(cfg.n_clients))
         t += max(durations) + round_overhead      # synchronous barrier
-        model = tree_weighted(locals_, sizes)
+        # scenario dropouts: the barrier still pays for the dropped
+        # clients' rounds, but their updates never reach the server
+        kept = [c for c in range(cfg.n_clients) if not h.drops(c)]
+        if kept:
+            model = tree_weighted([locals_[c] for c in kept],
+                                  [sizes[c] for c in kept])
         if h.tracker.update(t, h.mean_val(model)):
             break
     return h.result(name, model, h.tracker.converged_at or t, r + 1)
@@ -237,12 +283,13 @@ def run_fedasync(backend, client_data, global_test, cfg: FLConfig,
     state = {"model": h.init_model(), "version": 0, "rounds": 0}
 
     def arrive(c: int, local, v: int):
-        staleness = state["version"] - v
-        alpha = cfg.fedasync_alpha
-        if cfg.fedasync_staleness == "poly":
-            alpha = alpha / (1.0 + staleness) ** 0.5
-        state["model"] = tree_interpolate(state["model"], local, alpha)
-        state["version"] += 1
+        if not h.drops(c):      # scenario dropout: the update never arrives
+            staleness = state["version"] - v
+            alpha = cfg.fedasync_alpha
+            if cfg.fedasync_staleness == "poly":
+                alpha = alpha / (1.0 + staleness) ** 0.5
+            state["model"] = tree_interpolate(state["model"], local, alpha)
+            state["version"] += 1
         state["rounds"] += 1
         if state["rounds"] % cfg.n_clients == 0:
             h.tracker.update(loop.now, h.mean_val(state["model"]))
@@ -294,6 +341,24 @@ def _cluster_by(values: List[float], n_clusters: int) -> List[List[int]]:
     return [list(part) for part in np.array_split(order, n_clusters)]
 
 
+def fedat_tier_weights(tier_updates: List[int],
+                       ready: List[int]) -> List[float]:
+    """FedAT's cross-tier aggregation weights (Chai et al. 2021, Eq. 4).
+
+    Tier k's weight DECREASES in its update count T_k: straggler tiers
+    update less often, so each of their (rarer) models carries more weight
+    in the cross-tier average — without this, fast tiers dominate the
+    global model and the stragglers' data is drowned out.  The paper's
+    normalized form is p_k proportional to (sum_i T_i) - T_k; we use the
+    rank-equivalent 1/T_k (both strictly decreasing in T_k, identical
+    ordering), pinned by the regression tests in
+    tests/test_fl_baselines.py.  ``tier_updates`` counts start at 1 (the
+    init model counts as every tier's zeroth update), so the weights are
+    always finite.
+    """
+    return [1.0 / tier_updates[i] for i in ready]
+
+
 def run_fedat(backend, client_data, global_test, cfg: FLConfig,
               cost=None, profiles=None) -> RunResult:
     """Latency tiers: synchronous within a tier, async weighted across."""
@@ -314,9 +379,9 @@ def run_fedat(backend, client_data, global_test, cfg: FLConfig,
             tier_models[ti] = tree_mean(locals_)
             state["tier_updates"][ti] += 1
             # cross-tier weighted average: straggler tiers get MORE weight
-            # (FedAT's inverse-frequency weighting)
+            # (FedAT's inverse-frequency weighting, see fedat_tier_weights)
             ready = [i for i in tier_models if tier_models[i] is not None]
-            inv = [1.0 / state["tier_updates"][i] for i in ready]
+            inv = fedat_tier_weights(state["tier_updates"], ready)
             state["model"] = tree_weighted([tier_models[i] for i in ready], inv)
             state["rounds"] += 1
             h.tracker.update(loop.now, h.mean_val(state["model"]))
@@ -329,7 +394,9 @@ def run_fedat(backend, client_data, global_test, cfg: FLConfig,
         loop.schedule(0.0, lambda ti=ti: tier_round(ti, 0))
     loop.run(stop=lambda: h.tracker.done)
     return h.result("FedAT", state["model"],
-                    h.tracker.converged_at or loop.now, state["rounds"])
+                    h.tracker.converged_at or loop.now, state["rounds"],
+                    extra={"tier_updates": list(state["tier_updates"]),
+                           "tiers": [list(map(int, t)) for t in tiers]})
 
 
 def run_csafl(backend, client_data, global_test, cfg: FLConfig,
@@ -441,6 +508,7 @@ def run_dagfl(backend, client_data, global_test, cfg: FLConfig,
         clients_axis=cfg.clients_axis, data_axis=cfg.data_axis,
         overlap=cfg.overlap,
         ledger_checkpoint_every=cfg.ledger_checkpoint_every,
+        scenario=cfg.scenario,
         tip=TipSelectionConfig(n_select=cfg.dagfl_n_select, lam=0.0,
                                use_freshness=False, use_similarity=False,
                                p_similar=max(cfg.n_clients, 8)))
@@ -464,6 +532,7 @@ def run_dagafl(backend, client_data, global_test, cfg: FLConfig,
         mesh=cfg.mesh, clients_axis=cfg.clients_axis,
         data_axis=cfg.data_axis, overlap=cfg.overlap,
         ledger_checkpoint_every=cfg.ledger_checkpoint_every,
+        scenario=cfg.scenario,
         tip=tip_cfg or TipSelectionConfig())
     coord = DagAflCoordinator(backend, client_data, global_test, dcfg,
                               cost, profiles)

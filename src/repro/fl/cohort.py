@@ -101,6 +101,67 @@ def _tree_select(keep, new, old):
         lambda a, b: jnp.where(keep, a, b), new, old)
 
 
+# -- scenario update transforms (see repro/fl/scenarios.py) -------------------
+#
+#   new' = agg + gamma * (new - agg) + sigma * N(0, I)
+#
+# gamma = scale_gamma < 0 is scaled-gradient model poisoning, gamma = 0 is a
+# free-rider republishing the aggregate, sigma > 0 is DP noise.  gamma=1 /
+# sigma=0 is the identity only ALGEBRAICALLY (a + 1*(l-a) reorders the float
+# ops), so callers skip unaffected dispatches entirely and the stacked
+# program re-selects unaffected rows' original bits below.
+
+
+def _perturb_key(seed: int, client: int, seq: int):
+    """One PRNG key per (scenario seed, client, per-client update seq) —
+    shared by the single and stacked programs, so they agree bit-for-bit."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.fold_in(jax.random.fold_in(key, client), seq)
+
+
+def _perturb_tree(params, agg, gamma, sigma, key):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    agg_leaves = jax.tree_util.tree_leaves(agg)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, leaf, a in zip(keys, leaves, agg_leaves):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(leaf)
+            continue
+        v = a + gamma * (leaf - a)
+        out.append(v + sigma * jax.random.normal(k, leaf.shape, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+_PERTURB_ONE = jax.jit(_perturb_tree)
+_PERTURB_STACKED = jax.jit(jax.vmap(_perturb_tree))
+
+
+def perturb_update(agg, new, plan: dict, k: int):
+    """Apply row ``k`` of a :meth:`repro.fl.scenarios.Scenario.update_plan`
+    to one trained model (the sequential path / windows of one)."""
+    key = _perturb_key(plan["seed"], int(plan["clients"][k]),
+                       int(plan["seqs"][k]))
+    return _PERTURB_ONE(new, agg, jnp.float32(plan["gammas"][k]),
+                        jnp.float32(plan["sigmas"][k]), key)
+
+
+def perturb_cohort_stacked_trees(agg_stacked, new_stacked, plan: dict):
+    """Whole-window transform as ONE vmapped jitted program over the stacked
+    K-client pytrees, then a per-leaf select that restores unaffected rows'
+    exact bits (fault injection must not perturb honest clients)."""
+    keys = jnp.stack([_perturb_key(plan["seed"], int(c), int(s))
+                      for c, s in zip(plan["clients"], plan["seqs"])])
+    transformed = _PERTURB_STACKED(new_stacked, agg_stacked,
+                                   jnp.asarray(plan["gammas"]),
+                                   jnp.asarray(plan["sigmas"]), keys)
+    keep = jnp.asarray(plan["affected"])
+    return jax.tree_util.tree_map(
+        lambda t, o: jnp.where(
+            keep.reshape(keep.shape + (1,) * (t.ndim - 1)), t, o),
+        transformed, new_stacked)
+
+
 def _conv_as_matmul(x, w):
     """SAME-padding stride-1 convolution as im2col + one GEMM.
 
@@ -1093,6 +1154,13 @@ class CohortBackend:
                          limit: int = 128) -> np.ndarray:
         return self.signature_cohort_stacked(tree_stack(params_list),
                                              datasets, limit)
+
+    def perturb_cohort_stacked(self, agg_stacked, new_stacked, plan: dict):
+        """Scenario fault injection for a whole window (see
+        repro/fl/scenarios.py): ``new' = agg + gamma*(new-agg) + sigma*N``
+        as one vmapped jitted program; rows the plan marks unaffected keep
+        their exact bits."""
+        return perturb_cohort_stacked_trees(agg_stacked, new_stacked, plan)
 
 
 # ---------------------------------------------------------------------------

@@ -48,3 +48,35 @@ def test_async_faster_than_sequential_hierarchy(setup):
     per_round_async = r_async.sim_time / max(r_async.rounds, 1)
     per_round_hi = r_hi.sim_time / max(r_hi.rounds, 1)
     assert per_round_hi > per_round_async
+
+
+def test_fedat_tier_weights_pinned_values():
+    """FedAT cross-tier weights (Chai et al. 2021, Eq. 4): the comment in
+    run_fedat promises straggler tiers (fewer updates) get MORE weight —
+    pin the inverse-frequency form so a refactor can't silently flip it."""
+    from repro.fl import fedat_tier_weights
+    assert fedat_tier_weights([2, 5, 4], [0, 1, 2]) == [0.5, 0.2, 0.25]
+    # ready subset indexes tier_updates, preserving ready order
+    assert fedat_tier_weights([2, 5, 4], [2, 0]) == [0.25, 0.5]
+
+
+def test_fedat_straggler_tier_outweighs_fast_tier():
+    from repro.fl import fedat_tier_weights
+    updates = [9, 3, 1]          # tier 0 fast, tier 2 straggler
+    w = fedat_tier_weights(updates, [0, 1, 2])
+    assert w[2] > w[1] > w[0]
+    # strictly decreasing in update count, pairwise
+    for i in range(3):
+        for j in range(3):
+            if updates[i] < updates[j]:
+                assert w[i] > w[j]
+
+
+def test_fedat_exposes_tier_updates(setup):
+    backend, client_data, splits, cfg, profiles = setup
+    res = ALGORITHMS["fedat"](backend, client_data, splits["test"], cfg,
+                              CostModel(local_epoch=2.0), profiles)
+    ups = res.extra["tier_updates"]
+    assert len(ups) == len(res.extra["tiers"])
+    # counts start at 1 (init model) so weights stay finite
+    assert all(u >= 1 for u in ups)

@@ -1,0 +1,245 @@
+"""Fault-injection scenario layer (repro/fl/scenarios.py).
+
+The load-bearing property: a scenario whose rates are all zero is
+BIT-IDENTICAL to the honest run (scenario=None) on both the coordinator and
+the baselines, and fault-event counts at a fixed seed are deterministic —
+independent of the execution engine (sequential vs cohort-batched).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cnn import vgg_for
+from repro.core.coordinator import DagAflConfig, DagAflCoordinator
+from repro.core.simulator import CostModel, make_profiles
+from repro.data import make_benchmark_dataset, partition_dirichlet, split_811
+from repro.fl import (CNNBackend, FLConfig, SCENARIOS, Scenario,
+                      ScenarioConfig, run_fedavg, run_fedasync)
+from repro.fl.cohort import perturb_cohort_stacked_trees, perturb_update
+
+ZERO = ScenarioConfig(name="zero", seed=0)
+
+
+# -- unit level ---------------------------------------------------------------
+
+
+def test_roles_deterministic_and_disjoint():
+    cfg = ScenarioConfig(name="x", seed=3, malicious_frac=0.25,
+                         lazy_frac=0.25, straggler_frac=0.25)
+    a, b = Scenario(cfg, 8), Scenario(cfg, 8)
+    assert a.malicious == b.malicious and a.lazy == b.lazy
+    assert a.stragglers == b.stragglers
+    assert len(a.malicious) == len(a.lazy) == len(a.stragglers) == 2
+    assert not (a.malicious & a.lazy)
+    other = Scenario(dataclasses.replace(cfg, seed=4), 8)
+    assert (other.malicious, other.lazy) != (a.malicious, a.lazy)
+
+
+def test_update_plan_none_when_honest():
+    sc = Scenario(ZERO, 4)
+    assert sc.update_plan([0, 1, 2, 3]) is None
+    assert sc.counts()["updates_scaled"] == 0
+
+
+def test_update_plan_coefficients():
+    cfg = ScenarioConfig(name="mix", seed=0, malicious_frac=0.25,
+                         attack="scale", scale_gamma=-3.0,
+                         lazy_frac=0.25, lazy_mode="copy", dp_sigma=0.01)
+    sc = Scenario(cfg, 8)
+    clients = list(range(8))
+    plan = sc.update_plan(clients)
+    assert plan is not None and plan["affected"].all()   # dp hits everyone
+    for k, c in enumerate(clients):
+        assert plan["sigmas"][k] == np.float32(0.01)
+        if c in sc.malicious:
+            assert plan["gammas"][k] == np.float32(-3.0)
+        elif c in sc.lazy:
+            assert plan["gammas"][k] == 0.0
+        else:
+            assert plan["gammas"][k] == 1.0
+    # per-client seq advances across dispatches
+    plan2 = sc.update_plan(clients)
+    assert (plan2["seqs"] == plan["seqs"] + 1).all()
+
+
+def test_poison_data_flips_only_malicious():
+    cfg = ScenarioConfig(name="p", seed=0, malicious_frac=0.5,
+                         attack="label_flip")
+    sc = Scenario(cfg, 4)
+    data = []
+    for c in range(4):
+        ds = make_benchmark_dataset("mnist", n_samples=40, seed=c)
+        data.append({"train": ds, "val": ds, "test": ds})
+    out = sc.poison_data(data)
+    n_classes = 1 + max(int(np.asarray(d["train"].y).max()) for d in data)
+    for c in range(4):
+        if c in sc.malicious:
+            assert (np.asarray(out[c]["train"].y)
+                    == n_classes - 1 - np.asarray(data[c]["train"].y)).all()
+            assert (np.asarray(out[c]["val"].y)
+                    == n_classes - 1 - np.asarray(data[c]["val"].y)).all()
+        else:
+            assert out[c] is data[c]       # honest shards untouched objects
+    assert sc.counts()["clients_poisoned"] == len(sc.malicious)
+
+
+def test_duration_multiplier_and_dropout_streams():
+    cfg = ScenarioConfig(name="s", seed=1, straggler_frac=0.5,
+                         dropout_rate=0.5)
+    a, b = Scenario(cfg, 4), Scenario(cfg, 4)
+    for c in range(4):
+        for _ in range(5):
+            mult = a.duration_multiplier(c)
+            assert mult == b.duration_multiplier(c)
+            assert a.drops_publish(c) == b.drops_publish(c)
+            if c not in a.stragglers:
+                assert mult == 1.0
+            else:
+                assert mult > 1.0
+    assert a.counts() == b.counts()
+    assert a.counts()["publishes_dropped"] > 0
+
+
+# -- perturb programs (cohort engine) ----------------------------------------
+
+
+def _toy_trees(k=3, seed=0):
+    rng = np.random.default_rng(seed)
+    def tree(i):
+        return {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+                "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+    news = [tree(i) for i in range(k)]
+    aggs = [tree(i + 10) for i in range(k)]
+    return news, aggs
+
+
+def test_perturb_single_vs_stacked_bitwise_parity():
+    news, aggs = _toy_trees(3)
+    plan = {"seed": 7, "clients": np.array([2, 0, 5]),
+            "seqs": np.array([0, 3, 1]),
+            "gammas": np.array([-4.0, 0.0, 1.0], np.float32),
+            "sigmas": np.array([0.0, 0.02, 0.05], np.float32),
+            "affected": np.array([True, True, True])}
+    from repro.core.aggregate import tree_stack, tree_unstack
+    stacked = perturb_cohort_stacked_trees(tree_stack(aggs),
+                                           tree_stack(news), plan)
+    rows = tree_unstack(stacked)
+    for k in range(3):
+        single = perturb_update(aggs[k], news[k], plan, k)
+        for a, b in zip(jax.tree_util.tree_leaves(single),
+                        jax.tree_util.tree_leaves(rows[k])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_perturb_unaffected_rows_keep_exact_bits():
+    news, aggs = _toy_trees(3)
+    plan = {"seed": 0, "clients": np.array([0, 1, 2]),
+            "seqs": np.zeros(3, np.int64),
+            "gammas": np.array([-4.0, 1.0, 1.0], np.float32),
+            "sigmas": np.zeros(3, np.float32),
+            "affected": np.array([True, False, False])}
+    from repro.core.aggregate import tree_stack, tree_unstack
+    rows = tree_unstack(perturb_cohort_stacked_trees(
+        tree_stack(aggs), tree_stack(news), plan))
+    for k in (1, 2):
+        for a, b in zip(jax.tree_util.tree_leaves(news[k]),
+                        jax.tree_util.tree_leaves(rows[k])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    changed = jax.tree_util.tree_leaves(rows[0])
+    orig = jax.tree_util.tree_leaves(news[0])
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(changed, orig))
+
+
+# -- end-to-end: zero-rate bit-identity + engine-independent counts ----------
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_benchmark_dataset("mnist", n_samples=900, seed=0)
+    splits = split_811(ds)
+    parts = partition_dirichlet(splits["train"], 3, beta=0.5, seed=0)
+    client_data = []
+    for p in parts:
+        s = split_811(p, seed=1)
+        client_data.append({"train": s["train"], "val": s["val"],
+                            "test": s["test"]})
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=1, batch_size=32)
+    return backend, client_data, splits
+
+
+def _run_dagafl(world, scenario, cohort_size=1):
+    backend, client_data, splits = world
+    cfg = DagAflConfig(n_clients=3, max_rounds=2, local_epochs=1, seed=0,
+                       cohort_size=cohort_size, scenario=scenario,
+                       target_accuracy=None, patience=100)
+    coord = DagAflCoordinator(backend, client_data, splits["test"], cfg,
+                              CostModel(local_epoch=2.0),
+                              make_profiles(3, 0.5, 0))
+    return coord, coord.run()
+
+
+def test_zero_rate_scenario_bit_identical_dagafl(world):
+    _, honest = _run_dagafl(world, None)
+    _, zeroed = _run_dagafl(world, ZERO)
+    assert zeroed.final_accuracy == honest.final_accuracy
+    assert zeroed.sim_time == honest.sim_time
+    assert zeroed.extra["chain_len"] == honest.extra["chain_len"]
+    assert zeroed.extra["scenario_counts"] == {
+        k: 0 for k in zeroed.extra["scenario_counts"]}
+
+
+def test_zero_rate_scenario_bit_identical_baselines(world):
+    backend, client_data, splits = world
+    cost, profiles = CostModel(local_epoch=2.0), make_profiles(3, 0.5, 0)
+    for algo in (run_fedavg, run_fedasync):
+        honest = algo(backend, client_data, splits["test"],
+                      FLConfig(n_clients=3, max_rounds=2, local_epochs=1,
+                               seed=0), cost, profiles)
+        zeroed = algo(backend, client_data, splits["test"],
+                      FLConfig(n_clients=3, max_rounds=2, local_epochs=1,
+                               seed=0, scenario=ZERO), cost, profiles)
+        assert zeroed.final_accuracy == honest.final_accuracy
+        assert zeroed.sim_time == honest.sim_time
+
+
+def test_poison_counts_engine_independent(world):
+    """Per-client RNG sequencing makes fault-event counts a function of the
+    seed only — the cohort engine must report the same counts as the
+    sequential path (trajectories may differ; counts may not)."""
+    cfg = dataclasses.replace(SCENARIOS["poison"], seed=0)
+    sc_seq = Scenario(cfg, 3)
+    _run_dagafl(world, sc_seq)
+    sc_coh = Scenario(cfg, 3)
+    _run_dagafl(world, sc_coh, cohort_size=3)
+    assert sc_seq.counts() == sc_coh.counts()
+    assert sc_seq.counts()["updates_scaled"] > 0
+
+
+def test_dropout_aborts_publishes(world):
+    sc = Scenario(ScenarioConfig(name="d", seed=0, dropout_rate=1.0), 3)
+    coord, res = _run_dagafl(world, sc)
+    # every publish dropped: only genesis on the ledger, all attempts spent
+    assert res.extra["chain_len"] == 1
+    assert sc.counts()["publishes_dropped"] == 3 * 2     # clients x rounds
+    assert res.rounds == 0
+
+
+def test_lazy_stale_republishes_previous_model(world):
+    sc = Scenario(ScenarioConfig(name="l", seed=0, lazy_frac=1.0,
+                                 lazy_mode="stale"), 3)
+    coord, res = _run_dagafl(world, sc)
+    # round 1 has nothing to replay; round 2 republishes round 1's model
+    assert sc.counts()["updates_lazy"] == 3
+    for c in range(3):
+        txs = [t for t in coord.ledger.transactions()
+               if t.metadata.client_id == c]
+        assert len(txs) == 2
+        m0 = coord.store.get(txs[0].model_ref)
+        m1 = coord.store.get(txs[1].model_ref)
+        for a, b in zip(jax.tree_util.tree_leaves(m0),
+                        jax.tree_util.tree_leaves(m1)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,118 @@
+"""Eq. 7 verification under ACTIVE adversaries (robustness suite).
+
+Negative tests: metadata tampered after publish must fail verify_path /
+IncrementalVerifier / detect_tampered on both the append-only DAGLedger and
+the BoundedDAGLedger (including paths crossing the pruned boundary), and the
+counting sweep must return EXACTLY the tampered set — the robustness gate
+pins its detection counts.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.dag import BoundedDAGLedger, DAGLedger, TxMetadata
+from repro.core.verify import (IncrementalVerifier, detect_tampered,
+                               extract_path, verify_full_dag, verify_path)
+from repro.fl.scenarios import Scenario, ScenarioConfig
+
+
+def meta(cid=0, epoch=0, acc=0.5):
+    return TxMetadata(client_id=cid, signature=(0.1,), model_accuracy=acc,
+                      current_epoch=epoch, validation_node_id=cid)
+
+
+def chain(n=8, ledger=None):
+    led = ledger if ledger is not None else DAGLedger()
+    led.add_genesis(meta(-1))
+    prev, ids = led.genesis_id, []
+    for i in range(n):
+        prev = led.add_transaction(meta(i % 3, i), [prev], float(i + 1)).tx_id
+        ids.append(prev)
+    return led, ids
+
+
+def tamper(led, tx_id):
+    tx = led.get_tx(tx_id)
+    tx.metadata = dataclasses.replace(tx.metadata, model_accuracy=0.99)
+
+
+@pytest.mark.parametrize("bounded", [False, True])
+def test_detect_tampered_returns_exact_set(bounded):
+    led, ids = chain(8, BoundedDAGLedger() if bounded else None)
+    assert detect_tampered(led) == []
+    victims = [ids[2], ids[5]]
+    for v in victims:
+        tamper(led, v)
+    assert detect_tampered(led) == sorted(victims)
+    ok, _ = verify_full_dag(led)
+    assert not ok
+
+
+def test_tampered_tx_fails_stored_path():
+    led, ids = chain(6)
+    path = extract_path(led, ids[-1])
+    tamper(led, ids[3])
+    ok, reason = verify_path(led, path)
+    assert not ok and ids[3] in reason
+
+
+def test_incremental_verifier_flags_tamper_between_audits():
+    led, ids = chain(4)
+    iv = IncrementalVerifier(led)
+    assert iv.audit() == (True, "ok")
+    nxt = led.add_transaction(meta(1, 9), [ids[-1]], 9.0).tx_id
+    tamper(led, nxt)                     # tampered before the next audit
+    ok, reason = iv.audit()
+    assert not ok and nxt in reason
+
+
+def test_tampered_live_tx_fails_across_pruned_boundary():
+    """A stored path whose prefix was pruned still catches tampering of the
+    (live) suffix — the checkpoint retains the pruned hashes."""
+    led, ids = chain(8, BoundedDAGLedger())
+    path = extract_path(led, ids[-1])
+    led.checkpoint(now=100.0)
+    assert any(led.is_pruned(i) for i in ids), "checkpoint pruned nothing"
+    live = [i for i in ids if led.has_tx(i)]
+    tamper(led, live[-1])
+    ok, reason = verify_path(led, path)
+    assert not ok and live[-1] in reason
+    assert detect_tampered(led) == [live[-1]]
+
+
+def test_tampered_retained_hash_fails_across_pruned_boundary():
+    led, ids = chain(8, BoundedDAGLedger())
+    path = extract_path(led, ids[-1])
+    led.checkpoint(now=100.0)
+    pruned = [i for i in ids if led.is_pruned(i)]
+    led._tamper_pruned_hash(pruned[-1], "f" * 64)
+    ok, _ = verify_path(led, path)
+    assert not ok
+    ok, _ = verify_full_dag(led)
+    assert not ok
+
+
+def test_scenario_tamper_is_detected_end_to_end():
+    """Scenario.maybe_tamper (tamper_rate=1 on a malicious client) edits
+    stored metadata without recomputing the hash; the sweep catches every
+    such tx and nothing else."""
+    led, ids = chain(9)        # client ids cycle 0,1,2
+    cfg = ScenarioConfig(name="t", malicious_frac=0.4, tamper_rate=1.0)
+    sc = Scenario(cfg, 3)
+    assert sc.malicious, "scenario assigned no malicious clients"
+    for i in ids:
+        sc.maybe_tamper(led, i)
+    expected = sorted(sc.tampered)
+    assert expected, "tamper_rate=1.0 tampered nothing"
+    assert detect_tampered(led) == expected
+    ok, _ = IncrementalVerifier(led).audit()
+    assert not ok
+
+
+def test_zero_tamper_rate_touches_nothing():
+    led, ids = chain(6)
+    sc = Scenario(ScenarioConfig(name="z", malicious_frac=0.4), 3)
+    for i in ids:
+        assert not sc.maybe_tamper(led, i)
+    assert detect_tampered(led) == []
+    assert verify_full_dag(led) == (True, "ok")
