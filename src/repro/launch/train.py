@@ -39,6 +39,9 @@ def train_single(cfg, args):
                 (args.batch, cfg.encoder.n_ctx, cfg.d_model), jnp.float32)
         params, opt_state, m = jstep(params, opt_state, batch)
         if i % args.log_every == 0 or i == args.steps - 1:
+            # jstep dispatches asynchronously: sync before reading the clock
+            # or tok/s measures dispatch latency, not compute
+            jax.block_until_ready((params, m))
             dt = time.time() - t0
             tok_s = args.batch * args.seq * (i + 1) / max(dt, 1e-9)
             print(f"step {i:5d} loss={float(m['loss']):.4f} "

@@ -170,7 +170,7 @@ def test_coordinator_cohort_run_is_consistent(world):
     assert res.sim_time > 0
     # publishes happen at per-round completion times, not batched at flush:
     # transaction timestamps must not collapse onto a handful of instants
-    stamps = {round(tx.timestamp, 6) for tx in coord.ledger.nodes.values()}
+    stamps = {round(tx.timestamp, 6) for tx in coord.ledger.transactions()}
     assert len(stamps) > res.extra["cohorts_dispatched"] + 1
     init_acc = backend.evaluate(backend.init(jax.random.PRNGKey(0)),
                                 splits["test"])

@@ -168,7 +168,7 @@ def test_lm_coordinator_cohort_run_short_rounds_clamp(world):
     assert res.extra["cohorts_dispatched"] >= 1
     assert coord.loop.clamped > 0          # short rounds hit the clamp
     # simulated time stayed monotone through the clamped publishes
-    stamps = [tx.timestamp for tx in coord.ledger.nodes.values()]
+    stamps = [tx.timestamp for tx in coord.ledger.transactions()]
     assert all(t >= 0.0 for t in stamps)
 
 

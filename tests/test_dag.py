@@ -67,7 +67,7 @@ def test_latest_of_tie_breaking_keeps_insertion_order():
 def _scan_latest_of(led, client_id):
     """The pre-index O(ledger) reference implementation."""
     best, best_t = None, -1.0
-    for tx in led.nodes.values():
+    for tx in led.transactions():
         if tx.metadata.client_id == client_id and tx.timestamp >= best_t:
             best, best_t = tx.tx_id, tx.timestamp
     return best
@@ -134,7 +134,7 @@ def test_dag_is_acyclic_by_construction():
     a = led.add_transaction(meta(0, 1), [g], 1.0)
     b = led.add_transaction(meta(1, 2), [a.tx_id], 2.0)
     for anc in led.ancestors(b.tx_id):
-        assert led.nodes[anc].timestamp < led.nodes[b.tx_id].timestamp
+        assert led.get_tx(anc).timestamp < led.get_tx(b.tx_id).timestamp
 
 
 def test_model_store_tracks_bytes():

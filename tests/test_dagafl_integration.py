@@ -52,7 +52,7 @@ def test_dag_grows_and_verifies(setup):
     ok, reason = verify_full_dag(coord.ledger)
     assert ok, reason
     # metadata-only on chain: every tx's signature is a short tuple
-    for tx in coord.ledger.nodes.values():
+    for tx in coord.ledger.transactions():
         assert len(tx.metadata.signature) <= 16
 
 

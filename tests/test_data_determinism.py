@@ -1,0 +1,56 @@
+"""Dataset generation must not depend on the interpreter's hash salt.
+
+``make_image_dataset`` used to fold builtin ``hash(name)`` into the RNG
+seed, so the "same" dataset differed between processes whenever
+``PYTHONHASHSEED`` differed (which it does by default).  The fix derives
+the per-dataset salt from ``zlib.crc32`` instead.  This regression test
+generates data in two subprocesses pinned to different hash seeds and
+asserts bit-identical output.
+"""
+import hashlib
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+_CHILD = r"""
+import hashlib
+import numpy as np
+from repro.data.synthetic import make_benchmark_dataset, make_lm_dataset
+
+h = hashlib.sha256()
+for name in ("mnist", "cifar10"):
+    ds = make_benchmark_dataset(name, n_samples=128, seed=7)
+    h.update(np.ascontiguousarray(ds.x).tobytes())
+    h.update(np.ascontiguousarray(ds.y).tobytes())
+toks = make_lm_dataset(vocab=64, n_tokens=2000, seed=7)
+h.update(np.ascontiguousarray(toks).tobytes())
+print(h.hexdigest())
+"""
+
+
+def _digest_under_hashseed(hashseed: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONHASHSEED"] = hashseed
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    out = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, check=True)
+    return out.stdout.strip()
+
+
+def test_datasets_identical_across_hash_seeds():
+    a = _digest_under_hashseed("0")
+    b = _digest_under_hashseed("4242")
+    assert a == b, "dataset content depends on PYTHONHASHSEED"
+    assert len(a) == 64  # sanity: a real sha256 came back
+
+
+def test_name_salt_is_stable_and_distinct():
+    from repro.data.synthetic import _name_salt
+
+    # Pinned values: changing them silently re-rolls every synthetic dataset.
+    assert _name_salt("mnist") == _name_salt("mnist")
+    salts = {_name_salt(n) for n in ("mnist", "cifar10", "cifar100")}
+    assert len(salts) == 3

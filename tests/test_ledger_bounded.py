@@ -11,7 +11,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.dag import (GENESIS_ROOT, BoundedDAGLedger, CheckpointRecord,
                             DAGLedger, LedgerView, TxMetadata)
-from repro.core.tip_selection import TipSelectionConfig, select_tips
+from repro.core.tip_selection import (FnTipEvaluator, TipSelectionConfig,
+                                      TipSelectionRequest, TipSelector)
 from repro.core.verify import (IncrementalVerifier, extract_path,
                                verify_checkpoints, verify_full_dag,
                                verify_path)
@@ -71,7 +72,8 @@ def test_prune_preserves_tips(ops):
     assert bnd.tips_by_freshness(3) == full.tips_by_freshness(3)
     # pruned bodies are really gone, and exactly the evicted ones
     assert len(bnd) + bnd.n_pruned == len(full)
-    assert set(evicted) == {t for t in full.nodes if not bnd.has_tx(t)}
+    assert set(evicted) == {tx.tx_id for tx in full.transactions()
+                            if not bnd.has_tx(tx.tx_id)}
 
 
 @settings(max_examples=25, deadline=None)
@@ -92,8 +94,9 @@ def test_prune_preserves_selection(ops):
     full, bnd, _ = twin_drive(ops)
     cfg = TipSelectionConfig(n_select=2, use_similarity=False)
     for cid in range(N_CLIENTS):
-        a = select_tips(full, cid, 3, 100.0, _eval_fn, None, cfg)
-        b = select_tips(bnd, cid, 3, 100.0, _eval_fn, None, cfg)
+        req = TipSelectionRequest(client_id=cid, cur_epoch=3, now=100.0)
+        a = TipSelector(full, None, cfg).select(req, FnTipEvaluator(_eval_fn))
+        b = TipSelector(bnd, None, cfg).select(req, FnTipEvaluator(_eval_fn))
         assert [(s.tx_id, s.reachable, s.score) for s in a] == \
             [(s.tx_id, s.reachable, s.score) for s in b]
 
@@ -291,7 +294,7 @@ def test_incremental_verifier_detects_new_tamper():
     v = IncrementalVerifier(led)
     assert v.audit() == (True, "ok")
     tip = chain(led, 1)
-    led.nodes[tip].tx_hash = "0" * 64
+    led.get_tx(tip).tx_hash = "0" * 64    # tamper with the live Eq.7 hash
     ok, _ = v.audit()
     assert not ok
 

@@ -1,0 +1,186 @@
+"""Tests for the repro-lint static analyzer (tools/repro_lint).
+
+Three layers:
+
+* per-rule fixture pairs: every registered rule fires on its ``*_flagged.py``
+  fixture and stays silent on ``*_clean.py``;
+* engine behaviour: suppression comments, rule selection, syntax-error
+  reporting, output formats, CLI exit codes;
+* the meta-test: the analyzer runs clean over the whole repo
+  (``src tests benchmarks``), which is the invariant CI enforces.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from tools.repro_lint import all_rules, lint_paths, lint_source
+from tools.repro_lint.output import format_findings
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+TESTDATA = REPO_ROOT / "tools" / "repro_lint" / "testdata"
+
+# Path-scoped rules are linted as-if the fixture lived at this relative path.
+VIRTUAL_PATHS = {"DET003": "src/repro/core/fixture.py"}
+
+RULES = all_rules()
+RULE_IDS = [r.id for r in RULES]
+
+
+def _fixture(rule, kind):
+    path = TESTDATA / f"{rule.name.replace('-', '_')}_{kind}.py"
+    assert path.exists(), f"missing fixture for {rule.id}: {path}"
+    return path
+
+
+def _lint_fixture(rule, kind):
+    path = _fixture(rule, kind)
+    rel = VIRTUAL_PATHS.get(rule.id, str(path.relative_to(REPO_ROOT)))
+    return lint_source(path.read_text(), path=str(path), rel_path=rel,
+                       select={rule.id.lower()})
+
+
+# ---------------------------------------------------------------------------
+# registry shape
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_required_coverage():
+    assert len(RULES) >= 9
+    assert len(set(RULE_IDS)) == len(RULE_IDS), "duplicate rule ids"
+    families = {r.family for r in RULES}
+    # Determinism, JAX purity/perf, and API hygiene must all be represented.
+    assert "determinism" in families
+    assert families & {"jax-purity", "jax-perf"}
+    assert "api-hygiene" in families
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixture pairs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", RULES, ids=RULE_IDS)
+def test_rule_fires_on_flagged_fixture(rule):
+    findings = _lint_fixture(rule, "flagged")
+    assert findings, f"{rule.id} did not fire on its flagged fixture"
+    assert all(f.rule_id == rule.id for f in findings)
+    assert all(f.line >= 1 and f.col >= 0 for f in findings)
+
+
+@pytest.mark.parametrize("rule", RULES, ids=RULE_IDS)
+def test_rule_silent_on_clean_fixture(rule):
+    findings = _lint_fixture(rule, "clean")
+    assert findings == [], (
+        f"{rule.id} false-positived on its clean fixture: "
+        + "; ".join(f.render() for f in findings)
+    )
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+
+
+def test_same_line_suppression_by_name_and_id():
+    base = "x = hash('dataset-name')"
+    assert lint_source(base, path="<t>", select={"det001"})
+    for tag in ("builtin-hash", "DET001", "all"):
+        src = f"{base}  # repro-lint: disable={tag}"
+        assert lint_source(src, path="<t>", select={"det001"}) == [], tag
+
+
+def test_suppression_only_covers_its_line():
+    src = (
+        "a = hash('one')  # repro-lint: disable=builtin-hash\n"
+        "b = hash('two')\n"
+    )
+    findings = lint_source(src, path="<t>", select={"det001"})
+    assert [f.line for f in findings] == [2]
+
+
+def test_file_level_suppression():
+    src = (
+        "# repro-lint: disable-file=builtin-hash\n"
+        "a = hash('one')\n"
+        "b = hash('two')\n"
+    )
+    assert lint_source(src, path="<t>", select={"det001"}) == []
+
+
+# ---------------------------------------------------------------------------
+# engine behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_syntax_error_becomes_finding():
+    findings = lint_source("def broken(:\n", path="<t>")
+    assert len(findings) == 1
+    assert findings[0].rule_id == "E000"
+
+
+def test_select_limits_rules():
+    src = "import numpy as np\nx = np.random.rand(3)\ny = hash('k')\n"
+    only_hash = lint_source(src, path="<t>", select={"det001"})
+    assert {f.rule_id for f in only_hash} == {"DET001"}
+    both = lint_source(src, path="<t>")
+    assert {"DET001", "DET002"} <= {f.rule_id for f in both}
+
+
+def test_output_formats():
+    findings = lint_source("x = hash('k')\n", path="tools/x.py",
+                           rel_path="tools/x.py", select={"det001"})
+    text = format_findings(findings, "text", n_files=1)
+    assert "DET001" in text and "tools/x.py:1:" in text
+    payload = json.loads(format_findings(findings, "json", n_files=1))
+    assert payload["checked_files"] == 1
+    assert len(payload["findings"]) == 1
+    assert payload["findings"][0]["rule"] == "DET001"
+    gh = format_findings(findings, "github", n_files=1)
+    assert gh.startswith("::error file=tools/x.py,line=1,")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(*argv):
+    env = dict(os.environ)
+    return subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", *argv],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True)
+
+
+def test_cli_exit_codes_and_json():
+    flagged = TESTDATA / "builtin_hash_flagged.py"
+    clean = TESTDATA / "builtin_hash_clean.py"
+    bad = _run_cli("--select", "det001", "--format", "json", str(flagged))
+    assert bad.returncode == 1, bad.stderr
+    payload = json.loads(bad.stdout)
+    assert len(payload["findings"]) >= 1
+    good = _run_cli("--select", "det001", str(clean))
+    assert good.returncode == 0, good.stderr
+
+
+def test_cli_list_rules():
+    out = _run_cli("--list-rules")
+    assert out.returncode == 0
+    for rid in RULE_IDS:
+        assert rid in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# meta-test: the repo itself lints clean
+# ---------------------------------------------------------------------------
+
+
+def test_repo_lints_clean():
+    roots = [REPO_ROOT / d for d in ("src", "tests", "benchmarks")]
+    findings, n_files = lint_paths([str(r) for r in roots])
+    assert n_files >= 80, f"unexpectedly few files linted: {n_files}"
+    assert findings == [], "repo must lint clean:\n" + "\n".join(
+        f.render() for f in findings)

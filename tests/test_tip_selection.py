@@ -6,13 +6,26 @@ import pytest
 
 from repro.core.dag import DAGLedger, TxMetadata
 from repro.core.signature import SimilarityContract
-from repro.core.tip_selection import (TipSelectionConfig, freshness,
-                                      select_tips, tipc, top_up_tips)
+from repro.core.tip_selection import (FnTipEvaluator, TipSelectionConfig,
+                                      TipSelectionRequest, TipSelector,
+                                      freshness, select_tips, tipc,
+                                      top_up_tips)
 
 
 def meta(cid, epoch, sig=(1.0, 0.0)):
     return TxMetadata(client_id=cid, signature=sig, model_accuracy=0.5,
                       current_epoch=epoch, validation_node_id=cid)
+
+
+def run_selection(led, client_id, cur_epoch, now, evaluate_fn, contract, cfg,
+                  round_idx=0):
+    """Select via the first-class TipSelector API.  The deprecated
+    select_tips wrapper is exercised exactly once, in
+    test_selector_matches_legacy_wrapper."""
+    selector = TipSelector(led, contract, cfg)
+    req = TipSelectionRequest(client_id=client_id, cur_epoch=cur_epoch,
+                              now=now, round_idx=round_idx)
+    return selector.select(req, FnTipEvaluator(evaluate_fn))
 
 
 def test_tipc_eq1():
@@ -53,8 +66,8 @@ def test_lambda_split():
     led, mine, reach_tip, unreach = _setup()
     accs = {t.tx_id: 0.5 + 0.01 * i for i, t in enumerate(unreach)}
     accs[reach_tip.tx_id] = 0.9
-    chosen = select_tips(led, 0, 2, 3.0, lambda t: accs.get(t, 0.1), None,
-                         TipSelectionConfig(n_select=2, lam=0.5))
+    chosen = run_selection(led, 0, 2, 3.0, lambda t: accs.get(t, 0.1),
+                           None, TipSelectionConfig(n_select=2, lam=0.5))
     kinds = sorted(c.reachable for c in chosen)
     assert kinds == [False, True]          # one reachable + one unreachable
     assert any(c.tx_id == reach_tip.tx_id for c in chosen)
@@ -71,8 +84,8 @@ def test_similarity_filter_reduces_evaluations():
 
     evals = []
     cfg = TipSelectionConfig(n_select=2, lam=0.5, p_similar=2)
-    select_tips(led, 0, 2, 3.0, lambda t: (evals.append(t) or 0.5),
-                contract, cfg)
+    run_selection(led, 0, 2, 3.0, lambda t: (evals.append(t) or 0.5),
+                  contract, cfg)
     # reachable side evaluates 1 tip; unreachable side only p=2 of 6
     assert len(evals) <= 3
 
@@ -81,22 +94,23 @@ def test_no_similarity_evaluates_all_candidates():
     led, mine, reach_tip, unreach = _setup(n_other=6)
     evals = []
     cfg = TipSelectionConfig(n_select=2, lam=0.5, use_similarity=False)
-    select_tips(led, 0, 2, 3.0, lambda t: (evals.append(t) or 0.5), None, cfg)
+    run_selection(led, 0, 2, 3.0, lambda t: (evals.append(t) or 0.5),
+                  None, cfg)
     assert len(evals) == 7                 # 1 reachable + all 6 unreachable
 
 
 def test_small_dag_returns_everything():
     led = DAGLedger()
     led.add_genesis(meta(-1, 0))
-    chosen = select_tips(led, 0, 0, 0.0, lambda t: 0.5, None,
-                         TipSelectionConfig(n_select=2))
+    chosen = run_selection(led, 0, 0, 0.0, lambda t: 0.5, None,
+                           TipSelectionConfig(n_select=2))
     assert len(chosen) == 1               # only genesis exists
 
 
 def test_first_round_client_all_unreachable():
     led, mine, reach_tip, unreach = _setup()
-    chosen = select_tips(led, 77, 0, 3.0, lambda t: 0.5, None,
-                         TipSelectionConfig(n_select=2))
+    chosen = run_selection(led, 77, 0, 3.0, lambda t: 0.5, None,
+                           TipSelectionConfig(n_select=2))
     assert len(chosen) == 2
     assert all(not c.reachable for c in chosen)
 
@@ -109,8 +123,8 @@ def test_never_selects_own_transactions():
     g = led.genesis_id
     mine = led.add_transaction(meta(0, 1), [g], 1.0)          # client 0's tip
     other = led.add_transaction(meta(1, 1), [g], 1.1)
-    chosen = select_tips(led, 0, 1, 2.0, lambda t: 0.5, None,
-                         TipSelectionConfig(n_select=2))
+    chosen = run_selection(led, 0, 1, 2.0, lambda t: 0.5, None,
+                           TipSelectionConfig(n_select=2))
     assert mine.tx_id not in {c.tx_id for c in chosen}
     assert other.tx_id in {c.tx_id for c in chosen}
 
@@ -119,8 +133,8 @@ def test_own_tip_used_when_alone():
     led = DAGLedger()
     led.add_genesis(meta(-1, 0))
     mine = led.add_transaction(meta(0, 1), [led.genesis_id], 1.0)
-    chosen = select_tips(led, 0, 1, 2.0, lambda t: 0.5, None,
-                         TipSelectionConfig(n_select=2))
+    chosen = run_selection(led, 0, 1, 2.0, lambda t: 0.5, None,
+                           TipSelectionConfig(n_select=2))
     assert chosen and chosen[0].tx_id == mine.tx_id
 
 
@@ -187,16 +201,17 @@ def test_top_up_skips_already_chosen():
 
 def test_selector_matches_legacy_wrapper():
     """The back-compat select_tips wrapper and the TipSelector engine must
-    produce identical selections (the wrapper IS the engine)."""
-    from repro.core.tip_selection import (FnTipEvaluator, TipSelectionRequest,
-                                          TipSelector)
+    produce identical selections (the wrapper IS the engine).  This is the
+    repo's ONE sanctioned wrapper call site — everything else goes through
+    TipSelector (enforced by repro-lint's deprecated-select-tips rule)."""
     led, mine, reach_tip, unreach = _setup(n_other=5)
     accs = {t.tx_id: 0.4 + 0.05 * i for i, t in enumerate(unreach)}
     accs[reach_tip.tx_id] = 0.9
     fn = lambda t: accs.get(t, 0.1)  # noqa: E731
     cfg = TipSelectionConfig(n_select=2, lam=0.5, use_similarity=False)
 
-    legacy = select_tips(led, 0, 2, 3.0, fn, None, cfg)
+    legacy = select_tips(  # repro-lint: disable=deprecated-select-tips
+        led, 0, 2, 3.0, fn, None, cfg)
     sel = TipSelector(led, None, cfg)
     req = TipSelectionRequest(client_id=0, cur_epoch=2, now=3.0, round_idx=0)
     new = sel.select(req, FnTipEvaluator(fn))

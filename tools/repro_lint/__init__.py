@@ -1,0 +1,25 @@
+"""repro-lint: AST-based determinism & JAX-purity analyzer for DAG-AFL.
+
+Three rule families protect the repo's reproducibility invariants:
+
+* ``determinism`` (DET0xx) — PYTHONHASHSEED-dependent hashing, hidden
+  global RNG state, wall-clock reads in the simulation core, hash-salted
+  set iteration order;
+* ``jax-purity`` / ``jax-perf`` (JAX0xx) — side effects and host I/O in
+  traced functions, un-synced wall-clock timing of async dispatches,
+  hazardous static_argnums, constant-folded array closures;
+* ``api-hygiene`` (API0xx) — deprecated ``select_tips`` wrapper, ledger
+  internals bypassing :class:`LedgerView`, ``CohortPrograms`` suites
+  missing the 2-D engine's sum-form methods.
+
+Run ``python -m tools.repro_lint src tests benchmarks``; see
+``--list-rules`` and the README "Static analysis" section.
+"""
+from tools.repro_lint.engine import (Finding, ModuleContext, Rule,
+                                     all_rules, lint_paths, lint_source,
+                                     register)
+
+__version__ = "0.1.0"
+
+__all__ = ["Finding", "ModuleContext", "Rule", "all_rules", "lint_paths",
+           "lint_source", "register", "__version__"]

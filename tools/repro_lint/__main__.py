@@ -1,0 +1,45 @@
+"""CLI: ``python -m tools.repro_lint [--format F] [--select R] paths...``
+
+Exit status is 0 when every checked module is clean, 1 when there are
+findings — CI runs this as a gate over ``src tests benchmarks``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.repro_lint.engine import all_rules, lint_paths
+from tools.repro_lint.output import FORMATS, format_findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST-based determinism / JAX-purity / API-hygiene "
+                    "analyzer for the DAG-AFL repo")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to analyze")
+    ap.add_argument("--format", choices=FORMATS, default="text",
+                    dest="fmt", help="output format (default: text)")
+    ap.add_argument("--select", default="",
+                    help="comma-separated rule ids/names to run "
+                         "(default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.id}  {r.name:28s} [{r.family}] {r.description}")
+        return 0
+    if not args.paths:
+        ap.error("no paths given (try: src tests benchmarks)")
+
+    select = {s.strip() for s in args.select.split(",") if s.strip()} or None
+    findings, n_files = lint_paths(args.paths, select=select)
+    print(format_findings(findings, args.fmt, n_files))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

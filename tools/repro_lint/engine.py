@@ -1,0 +1,219 @@
+"""repro-lint core: module contexts, the rule registry, and the runner.
+
+The analyzer is deliberately stdlib-only (``ast`` + ``tokenize``): it must
+run in hermetic CI containers before any heavy dependency is installed, and
+it must never import the code it analyzes — every rule works on the parsed
+syntax tree of one module at a time.
+
+Suppression
+-----------
+A finding on line N is suppressed by a trailing comment on that line::
+
+    x = hash(name)  # repro-lint: disable=builtin-hash
+
+Rules can be named by id (``DET001``) or slug (``builtin-hash``), comma
+separated; ``all`` suppresses every rule.  A ``# repro-lint:
+disable-file=<rule>`` comment anywhere in the file suppresses the rule for
+the whole module (reserve this for generated code).
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import re
+import tokenize
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+_DIRECTIVE = re.compile(
+    r"#\s*repro-lint:\s*(disable(?:-file)?)\s*=\s*([A-Za-z0-9_,\- ]+)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule_id: str
+    rule_name: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule_id)
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule_id, "name": self.rule_name,
+                "path": self.path, "line": self.line, "col": self.col,
+                "message": self.message}
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col + 1}: "
+                f"{self.rule_id} [{self.rule_name}] {self.message}")
+
+
+class Rule:
+    """One analysis. Subclasses set the class attributes and yield findings
+    from :meth:`check`; path scoping (rules that only apply under certain
+    trees) is the rule's own responsibility via ``ctx.rel_path``."""
+
+    id: str = ""
+    name: str = ""
+    family: str = ""
+    description: str = ""
+
+    def check(self, ctx: "ModuleContext") -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: "ModuleContext", node: ast.AST,
+                message: str) -> Finding:
+        return Finding(self.id, self.name, ctx.path,
+                       getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), message)
+
+
+_REGISTRY: Dict[str, Rule] = {}
+_RULES_LOADED = False
+
+
+def register(cls):
+    """Class decorator adding one Rule instance to the registry."""
+    inst = cls()
+    if not inst.id or not inst.name or not inst.family:
+        raise ValueError(f"rule {cls.__name__} must set id/name/family")
+    if inst.id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {inst.id}")
+    _REGISTRY[inst.id] = inst
+    return cls
+
+
+def _ensure_rules_loaded():
+    global _RULES_LOADED
+    if not _RULES_LOADED:
+        # imported for their @register side effects
+        from tools.repro_lint import (rules_api,  # noqa: F401
+                                      rules_determinism, rules_jax)
+        _RULES_LOADED = True
+
+
+def all_rules() -> List[Rule]:
+    _ensure_rules_loaded()
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def _parse_suppressions(source: str) -> Tuple[Dict[int, Set[str]], Set[str]]:
+    line_sup: Dict[int, Set[str]] = {}
+    file_sup: Set[str] = set()
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _DIRECTIVE.search(tok.string)
+            if not m:
+                continue
+            names = {p.strip().lower() for p in m.group(2).split(",")
+                     if p.strip()}
+            if m.group(1) == "disable-file":
+                file_sup |= names
+            else:
+                line_sup.setdefault(tok.start[0], set()).update(names)
+    except tokenize.TokenError:
+        pass
+    return line_sup, file_sup
+
+
+class ModuleContext:
+    """One parsed module plus everything rules share: the tree, the
+    normalized path used for scoping, and the suppression table."""
+
+    def __init__(self, source: str, path: str = "<string>",
+                 rel_path: Optional[str] = None):
+        self.source = source
+        self.path = path
+        self.rel_path = (rel_path if rel_path is not None
+                         else path).replace(os.sep, "/")
+        self.tree = ast.parse(source, filename=path)
+        self._line_sup, self._file_sup = _parse_suppressions(source)
+        self._cache: Dict[str, object] = {}   # per-module rule scratch space
+
+    def is_suppressed(self, rule: Rule, line: int) -> bool:
+        keys = {rule.id.lower(), rule.name.lower(), "all"}
+        if keys & self._file_sup:
+            return True
+        return bool(keys & self._line_sup.get(line, set()))
+
+
+def qualname(node: ast.AST) -> Optional[str]:
+    """Dotted source name of a Name/Attribute chain (``jax.jit``), or None
+    for anything computed (calls, subscripts)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = qualname(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+DEFAULT_EXCLUDED_DIRS = {"__pycache__", ".git", "testdata"}
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in DEFAULT_EXCLUDED_DIRS)
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def _normalize_select(select) -> Optional[Set[str]]:
+    if not select:
+        return None
+    return {s.lower() for s in select}
+
+
+def lint_source(source: str, path: str = "<string>",
+                rel_path: Optional[str] = None,
+                select=None) -> List[Finding]:
+    """Run every (selected) rule over one module's source.  A module that
+    does not parse yields a single ``E000`` finding instead of raising — a
+    broken file must fail the gate, not hide from it."""
+    sel = _normalize_select(select)
+    try:
+        ctx = ModuleContext(source, path=path, rel_path=rel_path)
+    except SyntaxError as e:
+        return [Finding("E000", "syntax-error", path, e.lineno or 1,
+                        (e.offset or 1) - 1,
+                        f"module does not parse: {e.msg}")]
+    out: List[Finding] = []
+    for rule in all_rules():
+        if sel is not None and not ({rule.id.lower(), rule.name.lower()}
+                                    & sel):
+            continue
+        for f in rule.check(ctx):
+            if not ctx.is_suppressed(rule, f.line):
+                out.append(f)
+    return sorted(out, key=Finding.sort_key)
+
+
+def lint_paths(paths: Sequence[str],
+               select=None) -> Tuple[List[Finding], int]:
+    """Lint files/trees; returns (findings, files_checked)."""
+    findings: List[Finding] = []
+    n_files = 0
+    for fp in iter_python_files(paths):
+        n_files += 1
+        try:
+            with open(fp, encoding="utf-8") as fh:
+                src = fh.read()
+        except (OSError, UnicodeDecodeError) as e:
+            findings.append(Finding("E000", "unreadable-file", fp, 1, 0,
+                                    f"cannot read file: {e}"))
+            continue
+        findings.extend(lint_source(src, path=fp, select=select))
+    return sorted(findings, key=Finding.sort_key), n_files

@@ -1,0 +1,29 @@
+"""Finding renderers: human text, machine JSON, GitHub PR annotations."""
+from __future__ import annotations
+
+import json
+from typing import List
+
+from tools.repro_lint.engine import Finding
+
+FORMATS = ("text", "json", "github")
+
+
+def format_findings(findings: List[Finding], fmt: str,
+                    n_files: int) -> str:
+    if fmt == "json":
+        return json.dumps({"checked_files": n_files,
+                           "findings": [f.to_dict() for f in findings]},
+                          indent=2)
+    if fmt == "github":
+        # workflow-command annotations: GitHub attaches them to the PR diff
+        lines = [(f"::error file={f.path},line={f.line},col={f.col + 1},"
+                  f"title=repro-lint {f.rule_id} ({f.rule_name})::"
+                  f"{f.message}") for f in findings]
+        lines.append(f"repro-lint: {len(findings)} finding(s) in "
+                     f"{n_files} file(s)")
+        return "\n".join(lines)
+    lines = [f.render() for f in findings]
+    lines.append(f"repro-lint: {len(findings)} finding(s) in "
+                 f"{n_files} file(s) checked")
+    return "\n".join(lines)

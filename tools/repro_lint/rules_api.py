@@ -1,0 +1,106 @@
+"""API hygiene rules (API0xx).
+
+The PR 5 ledger/tip-selection redesign left a deprecated wrapper and a
+protocol boundary behind; the PR 4 cohort engine requires sum-form methods
+of every program suite.  These rules keep new code off the legacy paths:
+
+* ``select_tips(...)`` is a frozen 9-argument back-compat wrapper — new
+  call sites construct a :class:`TipSelector`;
+* ``.nodes`` / ``.children`` are ``DAGLedger`` internals: the
+  :class:`LedgerView` protocol (``get_tx`` / ``has_tx`` / ``transactions``
+  / ``tips`` ...) is the supported surface, and it is what keeps bounded
+  and unbounded ledgers interchangeable;
+* ``CohortPrograms`` subclasses must ship the sum-form loss/eval methods
+  the 2-D (clients x data) engine psums over the data mesh axis.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.repro_lint.engine import (Finding, ModuleContext, Rule, qualname,
+                                     register)
+
+
+@register
+class DeprecatedSelectTipsRule(Rule):
+    id = "API001"
+    name = "deprecated-select-tips"
+    family = "api-hygiene"
+    description = ("select_tips() is a frozen back-compat wrapper; new "
+                   "call sites use TipSelector.select(TipSelectionRequest, "
+                   "evaluator)")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if ctx.rel_path.endswith("repro/core/tip_selection.py"):
+            return                      # the wrapper's own definition site
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            qn = qualname(node.func)
+            if qn is not None and qn.split(".")[-1] == "select_tips":
+                yield self.finding(
+                    ctx, node,
+                    "call to the deprecated select_tips wrapper: construct "
+                    "TipSelector(ledger, contract, cfg) and call "
+                    ".select(TipSelectionRequest(...), evaluator)")
+
+
+_INTERNAL_ATTRS = {"nodes", "children"}
+
+
+@register
+class LedgerInternalsRule(Rule):
+    id = "API002"
+    name = "ledger-internals-access"
+    family = "api-hygiene"
+    description = (".nodes/.children are DAGLedger internals; go through "
+                   "the LedgerView protocol so bounded and unbounded "
+                   "ledgers stay interchangeable")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if ctx.rel_path.endswith("repro/core/dag.py"):
+            return                      # the ledger's own implementation
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Attribute) and \
+                    node.attr in _INTERNAL_ATTRS:
+                yield self.finding(
+                    ctx, node,
+                    f"'.{node.attr}' bypasses the LedgerView protocol — "
+                    "use get_tx/has_tx/transactions/tips/latest_of (a "
+                    "BoundedDAGLedger prunes these dicts out from under "
+                    "you)")
+
+
+_SUM_FORM_METHODS = ("sum_loss", "loss_denom", "eval_terms",
+                     "eval_shared_terms")
+
+
+@register
+class CohortProgramsSumFormRule(Rule):
+    id = "API003"
+    name = "cohort-programs-sum-form"
+    family = "api-hygiene"
+    description = ("direct CohortPrograms subclasses must define the "
+                   "sum-form methods the 2-D data-mesh engine psums")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            # only DIRECT subclasses of the protocol root are checkable
+            # statically; deeper subclasses may inherit the sum-form suite
+            if not any((qualname(b) or "").split(".")[-1] == "CohortPrograms"
+                       for b in node.bases):
+                continue
+            defined = {n.name for n in node.body
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))}
+            missing = [m for m in _SUM_FORM_METHODS if m not in defined]
+            if missing:
+                yield self.finding(
+                    ctx, node,
+                    f"'{node.name}' subclasses CohortPrograms but does not "
+                    f"define {', '.join(missing)}: without the sum-form "
+                    "terms the 2-D (clients x data) engine cannot psum "
+                    "its loss/eval over the data mesh axis")

@@ -1,0 +1,151 @@
+"""Determinism rules (DET0xx).
+
+DAG-AFL's verification story (Eq. 7 hash chains, the robustness gate, the
+bounded-ledger parity proofs) rests on bit-determinism: same seed -> same
+DAG, same fault-event counts, same checkpoint roots across processes and CI
+runs.  These rules prove the common hazard classes absent:
+
+* builtin ``hash()`` is salted by ``PYTHONHASHSEED`` and varies per process;
+* the legacy ``np.random.*`` module API shares hidden unseeded global state;
+* wall-clock reads inside the simulation core leak host time into sim state
+  where only ``sim_time`` is legal;
+* ``set`` iteration order is hash-salted and must not reach outputs.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.repro_lint.engine import (Finding, ModuleContext, Rule, qualname,
+                                     register)
+
+
+@register
+class BuiltinHashRule(Rule):
+    id = "DET001"
+    name = "builtin-hash"
+    family = "determinism"
+    description = ("builtin hash() is salted by PYTHONHASHSEED; anything "
+                   "derived from it (seeds, ordering keys, bucket ids) "
+                   "differs across processes")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        # if the module rebinds the name `hash`, it is not the builtin
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == "hash":
+                return
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == "hash"
+                    for t in node.targets):
+                return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id == "hash":
+                yield self.finding(
+                    ctx, node,
+                    "builtin hash() varies with PYTHONHASHSEED; use a "
+                    "stable digest (e.g. zlib.crc32(x.encode())) instead")
+
+
+# legacy module-level numpy RNG entry points that share hidden global state;
+# construction/seeding APIs are exempt
+_NP_RANDOM_OK = {"default_rng", "Generator", "PCG64", "Philox", "MT19937",
+                 "SFC64", "SeedSequence", "BitGenerator", "RandomState"}
+
+
+@register
+class LegacyNpRandomRule(Rule):
+    id = "DET002"
+    name = "legacy-np-random"
+    family = "determinism"
+    description = ("module-level np.random.* calls draw from hidden global "
+                   "state; use a seeded np.random.default_rng(...)")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            qn = qualname(node.func)
+            if qn is None:
+                continue
+            parts = qn.split(".")
+            if len(parts) == 3 and parts[0] in ("np", "numpy") and \
+                    parts[1] == "random" and parts[2] not in _NP_RANDOM_OK:
+                yield self.finding(
+                    ctx, node,
+                    f"{qn}() uses numpy's hidden global RNG state; draw "
+                    "from an explicitly seeded np.random.default_rng(seed)")
+
+
+_WALLCLOCK = {"time.time", "time.time_ns", "time.monotonic",
+              "time.monotonic_ns", "time.perf_counter",
+              "time.perf_counter_ns", "datetime.now", "datetime.utcnow",
+              "datetime.datetime.now", "datetime.datetime.utcnow"}
+
+# simulation trees where transaction timestamps / event times must come from
+# the event loop's sim_time, never the host clock
+_SIM_TREES = ("repro/core/", "repro/fl/")
+
+
+@register
+class WallClockInSimRule(Rule):
+    id = "DET003"
+    name = "wallclock-in-sim"
+    family = "determinism"
+    description = ("host-clock reads inside src/repro/core|fl leak wall "
+                   "time into simulation state; only sim_time is legal "
+                   "there")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not any(t in ctx.rel_path for t in _SIM_TREES):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and \
+                    qualname(node.func) in _WALLCLOCK:
+                yield self.finding(
+                    ctx, node,
+                    f"{qualname(node.func)}() inside the simulation core: "
+                    "timestamps and event times must derive from sim_time "
+                    "so runs are bit-reproducible")
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    return (isinstance(node, ast.Call) and
+            isinstance(node.func, ast.Name) and node.func.id in
+            ("set", "frozenset"))
+
+
+# materializers whose output order mirrors the iteration order of their arg
+_ORDER_SINKS = ("list", "tuple", "iter", "enumerate", "reversed")
+
+
+@register
+class SetIterationRule(Rule):
+    id = "DET004"
+    name = "unordered-set-iteration"
+    family = "determinism"
+    description = ("set iteration order is hash-salted; any order that can "
+                   "reach ledger/tip-selection/aggregation outputs must go "
+                   "through sorted(...)")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        msg = ("iterating a set produces a PYTHONHASHSEED-dependent order; "
+               "wrap it in sorted(...) before the order can escape")
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.For, ast.AsyncFor)) and \
+                    _is_set_expr(node.iter):
+                yield self.finding(ctx, node.iter, msg)
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                for gen in node.generators:
+                    if _is_set_expr(gen.iter):
+                        yield self.finding(ctx, gen.iter, msg)
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in _ORDER_SINKS and \
+                    node.args and _is_set_expr(node.args[0]):
+                yield self.finding(ctx, node.args[0], msg)

@@ -1,0 +1,16 @@
+"""API003 clean: subclass implements the full sum-form surface."""
+from repro.fl.cohort import CohortPrograms
+
+
+class MambaCohortPrograms(CohortPrograms):
+    def sum_loss(self, params, batch):
+        return 0.0
+
+    def loss_denom(self, batch):
+        return 1.0
+
+    def eval_terms(self, params, batch):
+        return {"acc": 0.0}
+
+    def eval_shared_terms(self, params, batch):
+        return {}

@@ -1,0 +1,16 @@
+"""API003 flagged: CohortPrograms subclass missing the sum-form surface.
+
+The 2-D (clients x data) mesh engine reduces partial sums across the data
+axis, so every programs bundle must expose sum_loss / loss_denom /
+eval_terms / eval_shared_terms.  This subclass only overrides the legacy
+mean-form entry points.
+"""
+from repro.fl.cohort import CohortPrograms
+
+
+class MambaCohortPrograms(CohortPrograms):
+    def loss(self, params, batch):
+        return 0.0
+
+    def evaluate(self, params, batch):
+        return {"acc": 0.0}

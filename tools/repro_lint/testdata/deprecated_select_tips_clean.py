@@ -1,0 +1,12 @@
+"""API001 clean: request-object tip selection API."""
+from repro.core.tip_selection import (
+    FnTipEvaluator,
+    TipSelectionRequest,
+    TipSelector,
+)
+
+
+def pick(led, cfg, fn):
+    selector = TipSelector(led, None, cfg)
+    req = TipSelectionRequest(client_id=0, cur_epoch=2, now=3.0)
+    return selector.select(req, FnTipEvaluator(fn))

@@ -1,0 +1,6 @@
+"""API001 flagged: call into the deprecated 9-arg wrapper."""
+from repro.core.tip_selection import select_tips
+
+
+def pick(led, cfg, fn):
+    return select_tips(led, 0, 2, 3.0, fn, None, cfg)

@@ -1,0 +1,14 @@
+"""JAX005 clean: the table is threaded through as an argument."""
+import jax
+import jax.numpy as jnp
+
+TABLE = jnp.arange(1024)
+
+
+@jax.jit
+def lookup(table, i):
+    return table[i]
+
+
+def run(i):
+    return lookup(TABLE, i)        # referenced outside the traced scope

@@ -1,0 +1,10 @@
+"""JAX005 flagged: jitted function closing over a module-level array."""
+import jax
+import jax.numpy as jnp
+
+TABLE = jnp.arange(1024)
+
+
+@jax.jit
+def lookup(i):
+    return TABLE[i]                # baked into the jaxpr as a constant

@@ -1,0 +1,17 @@
+"""JAX001 clean: pure traced functions; state threads through args."""
+import jax
+
+
+@jax.jit
+def step(params, grads):
+    out = dict(params)
+    out["w"] = params["w"] - 0.1 * grads
+    return out
+
+
+class Engine:
+    def __init__(self):
+        self._step = jax.jit(self._step_impl)
+
+    def _step_impl(self, x, n_calls):
+        return x * 2, n_calls + 1

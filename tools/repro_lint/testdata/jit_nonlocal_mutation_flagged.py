@@ -1,0 +1,21 @@
+"""JAX001 flagged: traced function mutating captured state."""
+import jax
+
+TRACE_LOG = []
+
+
+@jax.jit
+def step(params, grads):
+    TRACE_LOG.append(grads)        # runs once, at trace time
+    params["w"] = params["w"] - 0.1 * grads
+    return params
+
+
+class Engine:
+    def __init__(self):
+        self.calls = 0
+        self._step = jax.jit(self._step_impl)
+
+    def _step_impl(self, x):
+        self.calls += 1            # trace-time-only counter
+        return x * 2

@@ -1,0 +1,8 @@
+"""JAX002 clean: runtime-safe debugging primitives only."""
+import jax
+
+
+@jax.jit
+def debug_step(params, x):
+    jax.debug.print("step on {x}", x=x)    # fires at run time, every call
+    return params, x * 2

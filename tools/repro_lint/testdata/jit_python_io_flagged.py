@@ -1,0 +1,10 @@
+"""JAX002 flagged: host I/O inside a traced function."""
+import jax
+
+
+@jax.jit
+def debug_step(params, x):
+    print("step on", x)            # prints once, at trace time
+    with open("/tmp/trace.log", "a") as fh:
+        fh.write("traced\n")
+    return params, x * 2

@@ -1,0 +1,14 @@
+"""JAX003 clean: the span drains the async dispatch before the clock."""
+import time
+
+import jax
+
+
+def bench(step, batch, iters=10):
+    jstep = jax.jit(step)
+    t0 = time.time()
+    out = None
+    for _ in range(iters):
+        out = jstep(batch)
+    jax.block_until_ready(out)
+    return time.time() - t0, out

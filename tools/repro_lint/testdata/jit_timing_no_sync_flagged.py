@@ -1,0 +1,13 @@
+"""JAX003 flagged: wall-clock span around an un-synced jitted call."""
+import time
+
+import jax
+
+
+def bench(step, batch, iters=10):
+    jstep = jax.jit(step)
+    t0 = time.time()
+    out = None
+    for _ in range(iters):
+        out = jstep(batch)
+    return time.time() - t0, out       # measures dispatch, not compute

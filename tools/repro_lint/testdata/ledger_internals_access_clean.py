@@ -1,0 +1,7 @@
+"""API002 clean: everything goes through the LedgerView protocol."""
+
+
+def audit(ledger, tx_id):
+    n = sum(1 for _ in ledger.transactions())
+    present = ledger.has_tx(tx_id)
+    return n, present

@@ -1,0 +1,7 @@
+"""API002 flagged: reaching past LedgerView into dict internals."""
+
+
+def audit(ledger, tx_id):
+    n = len(ledger.nodes)                      # storage detail
+    kids = ledger.children.get(tx_id, [])      # adjacency detail
+    return n, kids

@@ -1,0 +1,9 @@
+"""DET002 clean: explicitly seeded generator objects only."""
+import numpy as np
+
+
+def shuffle_clients(n, seed=0):
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    noise = rng.normal(0.0, 1.0, size=n)
+    return order, noise

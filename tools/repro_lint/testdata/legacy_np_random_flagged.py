@@ -1,0 +1,9 @@
+"""DET002 flagged: module-level legacy numpy RNG calls."""
+import numpy as np
+
+
+def shuffle_clients(n):
+    np.random.seed(0)
+    order = np.random.permutation(n)
+    noise = np.random.normal(0.0, 1.0, size=n)
+    return order, noise

@@ -1,0 +1,9 @@
+"""JAX004 clean: static_argnums marks genuinely hashable config."""
+import jax
+
+
+def loss(params, batch, n_layers):
+    return ((params - batch) ** 2).sum() * n_layers
+
+
+jloss = jax.jit(loss, static_argnums=(2,))               # small hashable int

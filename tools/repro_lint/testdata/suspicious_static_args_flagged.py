@@ -1,0 +1,10 @@
+"""JAX004 flagged: array-valued / out-of-range static_argnums."""
+import jax
+
+
+def loss(params, batch, n_layers):
+    return ((params - batch) ** 2).sum() * n_layers
+
+
+jloss_bad_arg = jax.jit(loss, static_argnums=(1,))       # `batch` is array-ish
+jloss_oob = jax.jit(loss, static_argnums=(7,))           # only 3 params exist

@@ -1,0 +1,9 @@
+"""DET004 clean: every set is sorted before its order can escape."""
+
+
+def approve_order(tips, seen):
+    order = sorted(set(tips))
+    for tip in sorted(set(tips) - set(seen)):
+        order.append(tip)
+    fresh = {x.strip() for x in order}        # membership only, no iteration
+    return [t for t in order if t in fresh]

@@ -1,0 +1,8 @@
+"""DET004 flagged: hash-salted set order reaching outputs."""
+
+
+def approve_order(tips, seen):
+    order = list(set(tips))                   # materialized set order
+    for tip in set(seen):                     # iterated set order
+        order.append(tip)
+    return [t for t in {x.strip() for x in order}]

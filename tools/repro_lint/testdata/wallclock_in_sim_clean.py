@@ -1,0 +1,5 @@
+"""DET003 clean: simulated time is threaded through explicitly."""
+
+
+def publish(ledger, metadata, parents, sim_time):
+    return ledger.add_transaction(metadata, parents, sim_time)

@@ -1,0 +1,10 @@
+"""DET003 flagged: host-clock reads in the simulation core.
+
+Linted with a virtual path under ``src/repro/core/`` — the rule only
+applies inside the simulation trees.
+"""
+import time
+
+
+def publish(ledger, metadata, parents):
+    return ledger.add_transaction(metadata, parents, time.time())
