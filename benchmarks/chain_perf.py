@@ -138,6 +138,20 @@ def _make_lm_world(n_clients: int, n_samples: int, local_epochs: int,
 _WORLDS = {"cnn": _make_cnn_world, "lm": _make_lm_world}
 
 
+def _tip_decisions(coord) -> list:
+    """The run's full publish trace: for every transaction (in global
+    append order) the publishing ``(client, epoch)`` and the sorted
+    ``(client, epoch)`` set of the parents its tip selection approved.
+    Signature drift changes which tips win Eq. 4/5 scoring, so two runs
+    agree on this trace iff their Eq. 3 signatures were bit-identical."""
+    txs = sorted(coord.ledger.transactions(), key=lambda t: t.seq)
+    who = {t.tx_id: (t.metadata.client_id, t.metadata.current_epoch)
+           for t in txs}
+    return [(who[t.tx_id],
+             tuple(sorted(who.get(p, p) for p in t.parents)))
+            for t in txs]
+
+
 def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
                          n_samples: int = 6000, max_rounds: int = 2,
                          local_epochs: int = 2, cohort_window: float = 2.0,
@@ -146,7 +160,9 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
                          clients_axis: str = "clients",
                          backend_kind: str = "cnn",
                          repeats: int = 1,
-                         overlap: bool = True) -> Dict[str, float]:
+                         overlap: bool = True,
+                         kernels: bool = False,
+                         kernel_policy: str = "auto") -> Dict[str, float]:
     """Wall-clock: sequential DAG-AFL vs the K-client cohort engine.
 
     Same backend, same data, same simulated-cost model and seed; the only
@@ -165,6 +181,15 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
     vs the single-device cohort path (``mesh_accuracy_gap`` — numerics must
     agree across partitionings, not just engines).  ``overlap`` toggles the
     double-buffered host batch-assembly pipeline on every engine.
+
+    ``kernels=True`` adds the Pallas-dispatch A/B: a fourth run on the
+    same data with the cohort programs' ``kernel_policy`` set (Eq. 3
+    signatures and LM attention through ``repro.kernels.ops``) instead of
+    the jnp reference math.  The kernels are bit-stable by contract, so
+    the A/B reports an EXACT accuracy gap (gated at 0.0) and whether the
+    two runs' tip-selection traces are identical transaction for
+    transaction (signature drift changes DAG topology — see
+    ``_tip_decisions``).
     """
     import jax  # noqa: F401  (ensures backend selected before timing)
 
@@ -181,6 +206,11 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
     # should reflect that
     cost = CostModel(local_epoch=2.0 if backend_kind == "cnn" else 0.25)
     engine = CohortBackend(backend, capacity=cohort_size, overlap=overlap)
+    engine_kernels = None
+    if kernels:
+        engine_kernels = CohortBackend(backend, capacity=cohort_size,
+                                       overlap=overlap,
+                                       kernel_policy=kernel_policy)
     engine_sharded = None
     mesh_c, mesh_d = mesh_shape
     if mesh_c * max(mesh_d, 1) > 1:
@@ -202,17 +232,17 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
                                   cost, profiles, cohort_engine=eng)
         t0 = time.perf_counter()
         res = coord.run()
-        return time.perf_counter() - t0, res
+        return time.perf_counter() - t0, res, coord
 
     def run(csize, rounds, eng):
         """Best-of-``repeats`` wall clock (the runs are deterministic, so
-        min strips scheduler noise on shared containers); result from the
-        last run."""
-        best, res = float("inf"), None
+        min strips scheduler noise on shared containers); result and
+        coordinator from the last run."""
+        best, res, coord = float("inf"), None, None
         for _ in range(max(repeats, 1)):
-            t, res = run_once(csize, rounds, eng)
+            t, res, coord = run_once(csize, rounds, eng)
             best = min(best, t)
-        return best, res
+        return best, res, coord
 
     if warmup:
         # compile every measured path out of the timing with full-geometry
@@ -221,11 +251,13 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
         # leaves some programs to compile inside the measured region
         run_once(1, max_rounds, None)
         run_once(cohort_size, max_rounds, engine)
+        if engine_kernels is not None:
+            run_once(cohort_size, max_rounds, engine_kernels)
         if engine_sharded is not None:
             run_once(cohort_size, max_rounds, engine_sharded)
 
-    t_seq, res_seq = run(1, max_rounds, None)
-    t_coh, res_coh = run(cohort_size, max_rounds, engine)
+    t_seq, res_seq, _ = run(1, max_rounds, None)
+    t_coh, res_coh, coord_coh = run(cohort_size, max_rounds, engine)
     out = {
         "backend": backend_kind,
         "overlap": bool(overlap),
@@ -241,8 +273,24 @@ def bench_cohort_speedup(n_clients: int = 16, cohort_size: int = 8,
         "rounds": res_coh.rounds,
         "cohorts_dispatched": res_coh.extra["cohorts_dispatched"],
     }
+    if engine_kernels is not None:
+        t_ker, res_ker, coord_ker = run(cohort_size, max_rounds,
+                                        engine_kernels)
+        out.update({
+            "kernels_policy": engine_kernels.programs.kernel_policy,
+            "kernels_wall_s": t_ker,
+            # on-vs-off: >1 means the kernel path was faster than jnp
+            "kernels_speedup": t_coh / max(t_ker, 1e-9),
+            "kernels_rel_wall": t_ker / max(t_coh, 1e-9),
+            "kernels_accuracy": res_ker.final_accuracy,
+            # bit-stability contract: EXACT agreement, gated at 0.0
+            "kernels_accuracy_gap": abs(res_ker.final_accuracy
+                                        - res_coh.final_accuracy),
+            "kernels_tip_decisions_identical": (
+                _tip_decisions(coord_ker) == _tip_decisions(coord_coh)),
+        })
     if engine_sharded is not None:
-        t_sh, res_sh = run(cohort_size, max_rounds, engine_sharded)
+        t_sh, res_sh, _ = run(cohort_size, max_rounds, engine_sharded)
         out.update({
             "mesh_devices": int(
                 dict(engine_sharded.mesh.shape)[clients_axis]),
@@ -271,6 +319,19 @@ def cohort_rows(result: Dict[str, float], n_clients: int,
         f"cohort_acc_gap[{tag}],"
         f"{result['seq_wall_s']*1e6:.0f},{result['accuracy_gap']*100:.2f}",
     ]
+    if "kernels_wall_s" in result:
+        ktag = f"{tag}_{result['kernels_policy']}"
+        rows += [
+            f"cohort_kernels_speedup[{ktag}],"
+            f"{result['kernels_wall_s']*1e6:.0f},"
+            f"{result['kernels_speedup']:.2f}",
+            f"cohort_kernels_acc_gap[{ktag}],"
+            f"{result['kernels_wall_s']*1e6:.0f},"
+            f"{result['kernels_accuracy_gap']*100:.4f}",
+            f"cohort_kernels_tips_identical[{ktag}],"
+            f"{result['kernels_wall_s']*1e6:.0f},"
+            f"{int(result['kernels_tip_decisions_identical'])}",
+        ]
     if "sharded_wall_s" in result:
         mtag = f"{tag}_m{result.get('mesh_shape', result['mesh_devices'])}"
         rows += [
@@ -327,6 +388,17 @@ def main() -> None:
                     help="double-buffered host batch assembly (--no-overlap "
                          "= inline assembly; results are bit-identical, "
                          "only wall clock moves)")
+    ap.add_argument("--kernels", choices=["on", "off"], default="off",
+                    help="on = add the Pallas-dispatch A/B leg: rerun the "
+                         "cohort smoke with kernel_policy set and report "
+                         "the exact accuracy gap + tip-decision identity "
+                         "vs the jnp run (writes cohort_speedup_kernels"
+                         "[_lm].json)")
+    ap.add_argument("--kernel-policy", default="auto",
+                    choices=["auto", "compiled", "interpret", "reference"],
+                    help="dispatch policy for the --kernels on leg "
+                         "(auto resolves per platform: compiled on TPU, "
+                         "interpret elsewhere)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke geometry (small data, one round)")
     ap.add_argument("--repeats", type=int, default=2,
@@ -356,7 +428,9 @@ def main() -> None:
                                    clients_axis=args.clients_axis,
                                    backend_kind=args.backend,
                                    repeats=args.repeats,
-                                   overlap=args.overlap, **kw)
+                                   overlap=args.overlap,
+                                   kernels=args.kernels == "on",
+                                   kernel_policy=args.kernel_policy, **kw)
         for r in cohort_rows(res, args.n_clients, args.cohort_size):
             print(r)
         print(f"# sequential {res['seq_wall_s']:.1f}s "
@@ -364,6 +438,14 @@ def main() -> None:
               f"{res['cohort_wall_s']:.1f}s (acc {res['cohort_accuracy']:.3f})"
               f" -> {res['speedup']:.2f}x, "
               f"{res['cohorts_dispatched']} cohorts")
+        if "kernels_wall_s" in res:
+            print(f"# kernels ({res['kernels_policy']}) "
+                  f"{res['kernels_wall_s']:.1f}s "
+                  f"(acc {res['kernels_accuracy']:.3f}) -> "
+                  f"x{res['kernels_rel_wall']:.2f} wall vs jnp cohort, "
+                  f"acc gap {res['kernels_accuracy_gap']:.6f}, "
+                  f"tip decisions identical: "
+                  f"{res['kernels_tip_decisions_identical']}")
         if "sharded_wall_s" in res:
             print(f"# sharded (mesh {res['mesh_shape']}) "
                   f"{res['sharded_wall_s']:.1f}s "
@@ -376,9 +458,14 @@ def main() -> None:
                   "device_count=N)")
         os.makedirs(args.out_dir, exist_ok=True)
         # the LM smoke writes its own file so the CNN gate baseline and the
-        # LM gate baseline can be checked independently in CI
+        # LM gate baseline can be checked independently in CI; the kernels
+        # A/B likewise, so the plain smoke's baseline artifact never gains
+        # or loses fields depending on which CI leg wrote it last
         fname = ("cohort_speedup.json" if args.backend == "cnn"
                  else f"cohort_speedup_{args.backend}.json")
+        if args.kernels == "on":
+            fname = fname.replace("cohort_speedup",
+                                  "cohort_speedup_kernels", 1)
         with open(os.path.join(args.out_dir, fname), "w") as f:
             json.dump(res, f, indent=2)
     else:

@@ -30,6 +30,38 @@ forced 8-device host mesh oversubscribes cores, so its speedup measures the
 runner, not the code.  Correctness of the sharded path is gated through
 ``mesh_accuracy_gap`` and the test suite instead.
 
+A cohort smoke run with ``--kernels on`` additionally carries a kernel-path
+A/B leg (Pallas dispatch vs the incumbent jnp math, same engine, same
+seed), gated under the same sub-dict:
+
+  * ``kernels_accuracy_gap`` — must stay within
+    ``kernels_accuracy_gap_max`` (0.0: Eq. 3 signatures are bit-stable by
+    contract, so the kernel path must reproduce the jnp run's learning
+    outcome EXACTLY, not approximately).
+  * ``kernels_tip_decisions_identical`` — the two runs' full publish
+    traces (per-transaction ``(client, epoch)`` plus the sorted parent
+    set each tip selection chose) must match transaction for transaction;
+    signature drift changes DAG topology, and this is the field that
+    catches it.  ``--require-kernels`` pins a CI leg to having run the
+    A/B at all.
+
+Kernel micro-benchmarks (``kind: kernel_perf``, written by
+``benchmarks/kernel_perf.py``) are gated under the ``kernel_perf``
+thresholds sub-dict:
+
+  * ``<name>_intermediate_ratio_max`` — ANALYTIC kernel-vs-jnp
+    intermediate-footprint ratio per op (derived from shapes, so it is
+    deterministic on any runner).  The signature ceilings assert the
+    core claim of the swap: the kernel must NOT materialize the (T, d)
+    flag tensor the jnp path does.
+  * ``signature_rel_time_max``  — generous wall-clock parity ceiling for
+    the Eq. 3 bucket kernel vs jnp.  CI runs the INTERPRETER (an
+    emulation), so this only catches order-of-magnitude pathologies;
+    the ratio ceilings above carry the real gate.  Other ops' wall-clock
+    is reported, never gated (the per-channel interpreter emulation is
+    legitimately slower than fused XLA on tiny CPU shapes).
+  * the records must cover all three swapped hot-path ops.
+
 Ledger day-in-the-life (``kind: ledger_day``):
 
   * ``peak_live_frac``     — peak live-transaction count as a fraction of
@@ -210,12 +242,72 @@ def check_robustness(results: dict, thresholds: dict) -> list:
     return failures
 
 
+# the three hot-path swaps kernel_perf.py must cover (ISSUE 9 tentpole)
+KERNEL_PERF_OPS = ("signature", "signature_per_channel", "flash_attention")
+
+
+def check_kernel_perf(results: dict, thresholds: dict) -> list:
+    """Gate a ``kind=kernel_perf`` results file (see module docstring)."""
+    failures = []
+    t = thresholds.get("kernel_perf", {})
+    kernels = results.get("kernels") or []
+    if not kernels:
+        failures.append("results carry no kernel records")
+    seen = {r.get("name") for r in kernels}
+    for op in KERNEL_PERF_OPS:
+        if op not in seen:
+            failures.append(f"no '{op}' records — the micro-bench must "
+                            "cover every swapped hot-path op")
+    for r in kernels:
+        name = r.get("name", "?")
+        tag = f"{name}{r.get('shape')}"
+        ratio_max = t.get(f"{name}_intermediate_ratio_max")
+        if ratio_max is not None:
+            ratio = r.get("intermediate_ratio")
+            if ratio is None:
+                failures.append(f"{tag}: no intermediate_ratio field")
+            elif ratio > ratio_max:
+                failures.append(
+                    f"{tag}: kernel-vs-jnp intermediate footprint ratio "
+                    f"{ratio:.4f} above {ratio_max:.4f} — the kernel path "
+                    "materializes an intermediate it promised to stream")
+        rel_max = t.get(f"{name}_rel_time_max")
+        if rel_max is not None:
+            rel = r.get("rel_time")
+            if rel is None:
+                failures.append(f"{tag}: no rel_time field")
+            elif rel > rel_max:
+                failures.append(f"{tag}: kernel wall-clock {rel:.2f}x jnp, "
+                                f"above the {rel_max:.2f}x parity ceiling")
+    return failures
+
+
+def check_kernels_ab(results: dict, thresholds: dict) -> list:
+    """Gate the cohort smoke's ``--kernels on`` A/B fields when present."""
+    failures = []
+    kgap = results.get("kernels_accuracy_gap")
+    if kgap is None:
+        return failures
+    kmax = thresholds.get("kernels_accuracy_gap_max", 0.0)
+    if kgap > kmax:
+        failures.append(f"kernel-vs-jnp accuracy gap {kgap:.6f} above "
+                        f"{kmax:.6f} — Eq. 3 signatures must be bit-stable "
+                        "across dispatch policies")
+    if not results.get("kernels_tip_decisions_identical", False):
+        failures.append("kernel-path run made different tip-selection "
+                        "decisions than the jnp run — signature drift "
+                        "changed the DAG topology")
+    return failures
+
+
 def check(results: dict, thresholds: dict, quick: bool = False) -> list:
     """Returns a list of failure strings (empty = gate passes)."""
     if results.get("kind") == "ledger_day":
         return check_ledger(results, thresholds)
     if results.get("kind") == "robustness":
         return check_robustness(results, thresholds)
+    if results.get("kind") == "kernel_perf":
+        return check_kernel_perf(results, thresholds)
     failures = []
     thresholds = active_thresholds(thresholds, results)
     floor = thresholds["cohort_speedup_min"]
@@ -241,6 +333,7 @@ def check(results: dict, thresholds: dict, quick: bool = False) -> list:
         if mesh_gap > mesh_max:
             failures.append(f"sharded-vs-single-device accuracy gap "
                             f"{mesh_gap:.4f} above {mesh_max:.4f}")
+    failures += check_kernels_ab(results, thresholds)
     return failures
 
 
@@ -261,6 +354,9 @@ def main() -> None:
                          "data) mesh with data > 1 (the smoke must have run "
                          "with --mesh CxD, D >= 2, on a host with enough "
                          "devices)")
+    ap.add_argument("--require-kernels", action="store_true",
+                    help="fail unless the cohort smoke carries the kernel "
+                         "A/B fields (it must have run with --kernels on)")
     args = ap.parse_args()
 
     with open(args.results) as f:
@@ -304,6 +400,20 @@ def main() -> None:
             sys.exit(1)
         print("perf gate: PASS")
         return
+    if results.get("kind") == "kernel_perf":
+        print(f"perf gate[kernel_perf, {results.get('policy')} on "
+              f"{results.get('platform')}]:")
+        for r in results.get("kernels", []):
+            print(f"  {r.get('name', '?'):>22} {str(r.get('shape')):>18}: "
+                  f"rel_time x{r.get('rel_time', float('nan')):.2f} "
+                  f"intermediate_ratio "
+                  f"x{r.get('intermediate_ratio', float('nan')):.4f}")
+        if failures:
+            for msg in failures:
+                print(f"PERF GATE FAIL: {msg}", file=sys.stderr)
+            sys.exit(1)
+        print("perf gate: PASS")
+        return
     if args.require_mesh and "mesh_accuracy_gap" not in results:
         failures.append("--require-mesh: no sharded-engine results; the "
                         "multi-device smoke did not exercise shard_map")
@@ -311,7 +421,17 @@ def main() -> None:
         failures.append("--require-data-axis: the smoke did not exercise "
                         "the 2-D (clients, data) mesh (mesh_data_devices="
                         f"{results.get('mesh_data_devices', 1)})")
+    if args.require_kernels and "kernels_accuracy_gap" not in results:
+        failures.append("--require-kernels: no kernel A/B fields; the "
+                        "smoke did not run with --kernels on")
 
+    kern = ""
+    if "kernels_accuracy_gap" in results:
+        kern = (f" kernels[{results.get('kernels_policy')}]: "
+                f"acc_gap={results['kernels_accuracy_gap']:.6f} "
+                f"tips_identical="
+                f"{results.get('kernels_tip_decisions_identical')} "
+                f"rel_wall=x{results.get('kernels_rel_wall', float('nan')):.2f}")
     print(f"perf gate[{results.get('backend', 'cnn')}"
           f"{',' + results['mesh_shape'] if 'mesh_shape' in results else ''}"
           f"]: speedup={results.get('speedup', float('nan')):.2f}x "
@@ -319,7 +439,7 @@ def main() -> None:
           f"mesh_acc_gap={results.get('mesh_accuracy_gap', float('nan')):.4f}"
           f" sharded_speedup="
           f"{results.get('sharded_speedup', float('nan')):.2f}x"
-          f" (quick={args.quick})")
+          f" (quick={args.quick}){kern}")
     if failures:
         for msg in failures:
             print(f"PERF GATE FAIL: {msg}", file=sys.stderr)

@@ -4,6 +4,14 @@ Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
 the three-term roofline with dominant-bottleneck classification.  No jax
 needed — this is pure artifact post-processing, so it runs in benchmarks.run
 without touching device state.
+
+``kernel_records``/``kernel_table`` post-process the dispatch layer's
+micro-bench artifact (experiments/fl/kernel_perf.json, written by
+``benchmarks/kernel_perf.py``) the same way: the swapped hot-path ops are
+memory-bound (0/1-flag reductions and softmax-attention at cohort shapes
+sit far left of the ridge point), so their runtime floor is HBM traffic
+over bandwidth — the table shows how far each Pallas swap moves that floor
+by cutting the materialized intermediates out of the traffic term.
 """
 from __future__ import annotations
 
@@ -58,6 +66,47 @@ def rows(records) -> List[str]:
         bound = max(r["roofline"].values())
         out.append(f"roofline[{arch}][{shape}],"
                    f"{bound*1e6:.0f},{r['dominant'].replace('_s','')}")
+    return out
+
+
+def kernel_records(path: str = "experiments/fl/kernel_perf.json"):
+    """The kernel micro-bench artifact's per-op records ([] if absent)."""
+    if not os.path.exists(path):
+        return []
+    r = json.load(open(path))
+    if r.get("kind") != "kernel_perf":
+        return []
+    return r.get("kernels", [])
+
+
+def kernel_table(records: List[Dict]) -> List[str]:
+    """Markdown table: per-swap HBM-traffic and intermediate-footprint
+    movement (analytic, shape-derived) plus the measured wall-clock ratio.
+    ``hbm x`` is the kernel's traffic floor relative to jnp's — for these
+    memory-bound ops that IS the roofline movement."""
+    lines = ["| op | shape | jnp HBM B | kernel HBM B | hbm x | "
+             "jnp interm. B | kernel interm. B | interm. x | wall x |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        hbm_ratio = (r["kernel_hbm_bytes"]
+                     / max(r["jnp_hbm_bytes"], 1))
+        lines.append(
+            f"| {r['name']} | {'x'.join(str(s) for s in r['shape'])} "
+            f"| {r['jnp_hbm_bytes']:,} | {r['kernel_hbm_bytes']:,} "
+            f"| {hbm_ratio:.3f} "
+            f"| {r['jnp_intermediate_bytes']:,} "
+            f"| {r['kernel_intermediate_bytes']:,} "
+            f"| {r['intermediate_ratio']:.4f} | {r['rel_time']:.2f} |")
+    return lines
+
+
+def kernel_rows(records: List[Dict]) -> List[str]:
+    out = []
+    for r in records:
+        shape = "x".join(str(s) for s in r["shape"])
+        out.append(f"kernel_hbm_ratio[{r['name']}][{shape}],"
+                   f"{r['kernel_ms']*1e3:.1f},"
+                   f"{r['kernel_hbm_bytes'] / max(r['jnp_hbm_bytes'], 1):.3f}")
     return out
 
 

@@ -77,6 +77,9 @@ def main() -> None:
         rows += roofline.rows(records)
         counts = roofline.summary(records)
         print(f"# roofline dominant-term counts: {counts}", file=sys.stderr)
+    kernels = roofline.kernel_records()
+    if kernels:
+        rows += roofline.kernel_rows(kernels)
 
     if not args.skip_fl:
         from benchmarks import fl_tables

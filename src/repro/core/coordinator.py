@@ -81,6 +81,12 @@ class DagAflConfig:
     # background thread while the device computes (False = inline assembly,
     # bit-identical results — the toggle exists for benchmarking/debugging)
     overlap: bool = True
+    # kernel dispatch policy for the cohort hot paths (Eq. 3 signatures, LM
+    # attention): None keeps the incumbent stock-XLA math; "auto" resolves
+    # per platform (TPU -> compiled Pallas, else interpreter); "compiled" /
+    # "interpret" / "reference" force a concrete path.  See
+    # repro.kernels.dispatch.
+    kernel_policy: object = None
     # bounded-frontier ledger: > 0 switches to BoundedDAGLedger and folds
     # confirmed ancestry into checkpoints every this many SIMULATED seconds
     # (event-loop cadence), evicting pruned ModelStore entries.  Pruning
@@ -187,7 +193,7 @@ class DagAflCoordinator:
                     backend, shards, cohort_size=cfg.cohort_size,
                     mesh=cfg.mesh, clients_axis=cfg.clients_axis,
                     data_axis=cfg.data_axis, epochs=cfg.local_epochs,
-                    overlap=cfg.overlap)
+                    overlap=cfg.overlap, kernel_policy=cfg.kernel_policy)
             if self.cohort is not None:
                 self._window = CohortWindow(
                     self.loop, cfg.cohort_size, cfg.cohort_window,

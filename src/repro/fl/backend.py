@@ -28,11 +28,19 @@ class CNNBackend:
     """VGG-family clients on image data (the paper's experimental setup)."""
 
     def __init__(self, cfg: CNNConfig, lr: float = 0.01,
-                 local_epochs: int = 5, batch_size: int = 64):
+                 local_epochs: int = 5, batch_size: int = 64,
+                 kernel_policy: Optional[str] = None):
         self.cfg = cfg
         self.lr = lr
         self.local_epochs = local_epochs
         self.batch_size = batch_size
+        # None -> incumbent pure-jnp signature math; anything else resolves
+        # through the dispatch layer (e.g. "auto" -> interpret on CPU CI).
+        if kernel_policy is None:
+            self.kernel_policy = "reference"
+        else:
+            from repro.kernels.dispatch import resolve_policy
+            self.kernel_policy = resolve_policy(kernel_policy)
         self.opt = sgd(lr, momentum=0.9)
         self._train_epoch = jax.jit(self._train_epoch_impl)
         self._eval = jax.jit(self._eval_impl)
@@ -62,7 +70,8 @@ class CNNBackend:
         return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
 
     def _signature_impl(self, params, x):
-        _, sig = cnn_mod.cnn_forward(params, x, self.cfg, want_signature=True)
+        _, sig = cnn_mod.cnn_forward(params, x, self.cfg, want_signature=True,
+                                     kernel_policy=self.kernel_policy)
         return sig
 
     # -- public API ----------------------------------------------------------
@@ -108,13 +117,25 @@ class LMBackend:
     """Transformer clients on token streams (framework-scale DAG-AFL)."""
 
     def __init__(self, cfg: ArchConfig, lr: float = 3e-3,
-                 local_steps: int = 8, batch_size: int = 8, seq_len: int = 64):
+                 local_steps: int = 8, batch_size: int = 8, seq_len: int = 64,
+                 kernel_policy: Optional[str] = None):
         self.cfg = cfg
         self.local_steps = local_steps
         self.batch_size = batch_size
         self.seq_len = seq_len
         self.opt = sgd(lr, momentum=0.9)
-        self.runtime = Runtime(want_signature=True)
+        # kernel_policy=None keeps the incumbent stock-XLA forward; a policy
+        # turns on the Pallas hot paths (attention + Eq. 3 signature) for
+        # eval/signature programs — training stays on the XLA path because
+        # pallas_call is not differentiable (see cohort.LMCohortPrograms).
+        if kernel_policy is None:
+            self.kernel_policy = "reference"
+            self.runtime = Runtime(want_signature=True)
+        else:
+            from repro.kernels.dispatch import resolve_policy
+            self.kernel_policy = resolve_policy(kernel_policy)
+            self.runtime = Runtime(want_signature=True, use_pallas=True,
+                                   kernel_policy=self.kernel_policy)
         self._train_steps = jax.jit(self._train_steps_impl)
         self._eval = jax.jit(self._eval_impl)
 

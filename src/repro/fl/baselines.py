@@ -53,6 +53,9 @@ class FLConfig:
     data_axis: str = "data"
     # overlapped host pipeline (see DagAflConfig.overlap)
     overlap: bool = True
+    # kernel dispatch policy for the cohort hot paths
+    # (see DagAflConfig.kernel_policy / repro.kernels.dispatch)
+    kernel_policy: object = None
     # algorithm-specific knobs
     fedasync_alpha: float = 0.6
     fedasync_staleness: str = "poly"     # poly | constant
@@ -101,7 +104,8 @@ class _Harness:
                 [client_data[c]["train"] for c in range(cfg.n_clients)],
                 cohort_size=cfg.cohort_size, mesh=cfg.mesh,
                 clients_axis=cfg.clients_axis, data_axis=cfg.data_axis,
-                epochs=cfg.local_epochs, overlap=cfg.overlap)
+                epochs=cfg.local_epochs, overlap=cfg.overlap,
+                kernel_policy=cfg.kernel_policy)
         self._val_sets = [client_data[c]["val"]
                           for c in range(cfg.n_clients)]
 

@@ -242,9 +242,17 @@ class CohortPrograms:
     # outweigh fusion for tiny sweeps (suite-specific dispatch economics)
     eval_many_min_batch: int = 1
 
-    def __init__(self, backend):
+    def __init__(self, backend, kernel_policy: Optional[str] = None):
         self.backend = backend
         self.cfg = backend.cfg
+        # concrete kernel policy for the suite's Eq. 3 hot paths: an explicit
+        # argument wins, else inherit the backend's (backends without the
+        # knob mean the incumbent pure-jnp math)
+        if kernel_policy is None:
+            self.kernel_policy = getattr(backend, "kernel_policy", "reference")
+        else:
+            from repro.kernels.dispatch import resolve_policy
+            self.kernel_policy = resolve_policy(kernel_policy)
 
     @property
     def default_epochs(self) -> int:
@@ -378,8 +386,11 @@ class CNNCohortPrograms(CohortPrograms):
                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
                 x = jax.nn.relu(x + p["b"])
                 if conv_idx == cfg.signature_layer:
-                    return jnp.mean((x == 0.0).astype(jnp.float32),
-                                    axis=(1, 2))                  # (N, ch)
+                    # per-sample zero fractions through the kernel dispatch
+                    # layer ("reference" -> the incumbent jnp.mean bits)
+                    from repro.kernels import ops as kops
+                    return kops.signature_per_channel(
+                        x, tau=0.0, policy=self.kernel_policy)    # (N, ch)
                 conv_idx += 1
             x = _max_pool_2x2(x)
         raise ValueError(f"signature_layer {cfg.signature_layer} out of "
@@ -434,19 +445,29 @@ class LMCohortPrograms(CohortPrograms):
     vmap_eval = True            # transformer forwards vmap onto batched GEMMs
     eval_many_min_batch = 3
 
-    def __init__(self, backend):
-        super().__init__(backend)
+    def __init__(self, backend, kernel_policy: Optional[str] = None):
+        super().__init__(backend, kernel_policy)
         import dataclasses
         # eval/signature forwards don't need the fused aux signature (we
-        # compute per-sample rows ourselves for maskability)
-        self.runtime = dataclasses.replace(backend.runtime,
-                                           want_signature=False)
+        # compute per-sample rows ourselves for maskability); the suite's
+        # kernel policy decides whether they run the Pallas hot paths
+        use_pallas = self.kernel_policy != "reference"
+        self.runtime = dataclasses.replace(
+            backend.runtime, want_signature=False, use_pallas=use_pallas,
+            kernel_policy=self.kernel_policy)
+        # per-sample Eq. 3 rows read tau/dims off this one (keeps the
+        # backend's want_signature semantics but the suite's policy)
+        self.sig_runtime = dataclasses.replace(
+            backend.runtime, use_pallas=use_pallas,
+            kernel_policy=self.kernel_policy)
         # the batched train step drops remat: rematerialization trades
         # compute for activation memory, the right call for production-size
         # models but pure overhead for FL-size ones (~1.3x extra forward
         # FLOPs); gradients are bit-comparable either way, which the
-        # cohort-vs-sequential property tests pin down
-        self.train_runtime = dataclasses.replace(self.runtime, remat=False)
+        # cohort-vs-sequential property tests pin down.  Training always
+        # stays on the stock-XLA path: pallas_call has no VJP rule.
+        self.train_runtime = dataclasses.replace(self.runtime, remat=False,
+                                                 use_pallas=False)
 
     @property
     def default_epochs(self) -> int:
@@ -501,7 +522,7 @@ class LMCohortPrograms(CohortPrograms):
         from repro.models import transformer as tfm
         h, _, _ = tfm.forward_hidden(params, {"tokens": xs[:, :-1]}, self.cfg,
                                      self.runtime, mode="prefill")
-        return tfm.per_sample_signature(h, self.backend.runtime)
+        return tfm.per_sample_signature(h, self.sig_runtime)
 
     def train_steps(self, ds, epochs: int) -> int:
         # one step per "epoch" regardless of stream length (LMBackend
@@ -570,13 +591,19 @@ class CohortBackend:
     def __init__(self, backend, capacity: Optional[int] = None,
                  eval_pad_quantum: int = 64, mesh=None,
                  clients_axis: str = "clients", data_axis: str = "data",
-                 eval_cache_entries: int = 64, overlap: bool = True):
+                 eval_cache_entries: int = 64, overlap: bool = True,
+                 kernel_policy: Optional[str] = None):
         programs_cls = _programs_for(backend)
         if programs_cls is None:
             raise TypeError(
                 f"no CohortPrograms registered for {type(backend).__name__}; "
                 f"known: {[c.backend_cls.__name__ for c in _PROGRAM_REGISTRY]}")
-        self.programs = programs_cls(backend)
+        # third-party suites registered before the kernel_policy kwarg keep
+        # working: only pass it through when the caller asked for one
+        if kernel_policy is None:
+            self.programs = programs_cls(backend)
+        else:
+            self.programs = programs_cls(backend, kernel_policy=kernel_policy)
         self.backend = backend
         self.capacity = capacity
         # padding quantum for eval/signature sample axes: shards pad to the
@@ -631,18 +658,27 @@ class CohortBackend:
                                          out_specs=out_specs,
                                          check_rep=check_rep))
 
+            # pallas_call has no shard_map replication rule, so the
+            # eval/signature programs (the ones that run kernels when the
+            # suite's policy is not "reference") must opt out of
+            # rep-checking; training always stays on the XLA path and
+            # keeps the check
+            ck = self.programs.kernel_policy == "reference"
+
             if self._n_data <= 1:
                 self._train_jit = spmd(self._train_impl, (c, c, c, c), (c, c))
                 self._train_uniform_jit = spmd(self._train_uniform_impl,
                                                (c, c, c), (c, c))
-                self._eval_jit = spmd(self._eval_impl, (c, c, c, c), c)
+                self._eval_jit = spmd(self._eval_impl, (c, c, c, c), c,
+                                      check_rep=ck)
                 # shared model replicated, K val shards sharded over clients
                 self._eval_shared_jit = spmd(self._eval_shared_impl,
-                                             (r, c, c, c), c)
+                                             (r, c, c, c), c, check_rep=ck)
                 # M candidate models sharded, the one val shard replicated
                 self._eval_many_jit = spmd(self._eval_many_impl,
-                                           (c, r, r, r), c)
-                self._sig_jit = spmd(self._sig_impl, (c, c, c), c)
+                                           (c, r, r, r), c, check_rep=ck)
+                self._sig_jit = spmd(self._sig_impl, (c, c, c), c,
+                                     check_rep=ck)
             else:
                 # 2-D (clients, data): batch arrays split their sample dim
                 # over `data` (dim 2 for train (K, T, B, ...), dim 1 for
@@ -1214,7 +1250,8 @@ def build_cohort_engine(backend, train_shards: Sequence, *,
                         clients_axis: str = "clients",
                         data_axis: str = "data",
                         epochs: Optional[int] = None,
-                        overlap: bool = True
+                        overlap: bool = True,
+                        kernel_policy: Optional[str] = None
                         ) -> Optional[CohortBackend]:
     """One-stop engine construction for any registered backend family:
     resolves the mesh spec (1-D or 2-D, see :func:`resolve_cohort_mesh`),
@@ -1227,6 +1264,7 @@ def build_cohort_engine(backend, train_shards: Sequence, *,
     engine = CohortBackend(
         backend, capacity=cohort_size,
         mesh=resolve_cohort_mesh(mesh, cohort_size, clients_axis, data_axis),
-        clients_axis=clients_axis, data_axis=data_axis, overlap=overlap)
+        clients_axis=clients_axis, data_axis=data_axis, overlap=overlap,
+        kernel_policy=kernel_policy)
     engine.register_shards(train_shards, epochs=epochs)
     return engine

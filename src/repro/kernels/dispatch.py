@@ -1,0 +1,91 @@
+"""Platform-aware kernel dispatch policy.
+
+Every wrapper in :mod:`repro.kernels.ops` executes under one of three
+concrete *policies*:
+
+  ``"compiled"``   lower the Pallas kernel to Mosaic (TPU) — the real
+                   kernel, fused reads, VMEM accumulators.
+  ``"interpret"``  run the same kernel body through the Pallas
+                   interpreter (any backend; the CPU-container CI path).
+                   Same memory-access structure, per-block Python grid.
+  ``"reference"``  skip Pallas entirely and run the pure-jnp oracle
+                   (``kernels/ref.py`` or the inline jnp math) — the
+                   stock-XLA incumbent path, bit-for-bit.
+
+``"auto"`` resolves to a concrete policy at call/construction time:
+an explicit non-auto argument wins, then the ``REPRO_KERNEL_POLICY``
+environment variable, then the platform default from
+``jax.default_backend()`` (TPU -> ``"compiled"``, anything else ->
+``"interpret"``).  Resolution is pure host logic — call it outside jit
+(backend constructors do) or at trace time; either way the chosen branch
+is baked into the compiled program.
+
+Why this lives in its own module: ``ops.py`` and every kernel file need
+the resolver, and ``ops.py`` imports the kernel files — a resolver inside
+``ops.py`` would make the kernel files import their own importer.
+"""
+from __future__ import annotations
+
+import os
+
+KERNEL_POLICIES = ("auto", "compiled", "interpret", "reference")
+
+# environment override for the "auto" policy (itself may be "auto")
+POLICY_ENV = "REPRO_KERNEL_POLICY"
+
+
+def _validate(policy: str, source: str) -> str:
+    if policy not in KERNEL_POLICIES:
+        raise ValueError(
+            f"unknown kernel policy {policy!r} (from {source}); "
+            f"expected one of {KERNEL_POLICIES}")
+    return policy
+
+
+def resolve_policy(policy=None) -> str:
+    """Resolve a policy request to a concrete ``"compiled"`` /
+    ``"interpret"`` / ``"reference"``.
+
+    ``None`` and ``"auto"`` consult ``REPRO_KERNEL_POLICY`` and then the
+    platform; an explicit concrete policy is validated and returned as-is
+    (the env var never overrides an explicit argument).
+    """
+    p = _validate("auto" if policy is None else str(policy), "argument")
+    if p != "auto":
+        return p
+    env = os.environ.get(POLICY_ENV, "").strip().lower()
+    if env:
+        p = _validate(env, f"${POLICY_ENV}")
+        if p != "auto":
+            return p
+    import jax
+    return "compiled" if jax.default_backend() == "tpu" else "interpret"
+
+
+def resolve_interpret(interpret=None, policy=None) -> bool:
+    """The ``interpret=`` flag a ``pallas_call`` site should use.
+
+    An explicit ``interpret`` argument is the override of last resort and
+    always wins; otherwise every policy except ``"compiled"`` interprets
+    (``"reference"`` never reaches a ``pallas_call``, so mapping it to the
+    interpreter is the safe degenerate answer).
+    """
+    if interpret is not None:
+        return bool(interpret)
+    return resolve_policy(policy) != "compiled"
+
+
+def policy_from_runtime(runtime) -> str:
+    """The concrete policy a model hot path should run under.
+
+    ``use_pallas=False`` (the default ``Runtime``) means the incumbent
+    stock-XLA math: policy ``"reference"``, bit-for-bit today's numbers.
+    ``use_pallas=True`` resolves the runtime's ``kernel_policy`` request;
+    a legacy non-None ``pallas_interpret`` forces interpret/compiled.
+    """
+    if runtime is None or not getattr(runtime, "use_pallas", False):
+        return "reference"
+    legacy = getattr(runtime, "pallas_interpret", None)
+    if legacy is not None:
+        return "interpret" if legacy else "compiled"
+    return resolve_policy(getattr(runtime, "kernel_policy", "auto"))

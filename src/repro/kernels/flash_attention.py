@@ -85,12 +85,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = -1,
                          softcap: float = 0.0, block_q: int = 128,
-                         block_k: int = 128, interpret: bool = True):
+                         block_k: int = 128, interpret=None):
     """q (B,H,Sq,hd); k,v (B,K,Sk,hd) with H % K == 0 (GQA).
 
     Returns (B,H,Sq,hd) in q.dtype.  Sq must equal Sk (self-attention over
     the same positions); callers pad to block multiples.
+    ``interpret=None`` resolves from the platform dispatch policy.
     """
+    from repro.kernels.dispatch import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B, H, S, hd = q.shape
     K = k.shape[1]
     G = H // K

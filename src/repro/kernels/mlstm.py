@@ -94,12 +94,15 @@ def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref,
 
 
 def mlstm_chunkwise_bshd(q, k, v, i_gate, f_gate, *, chunk: int = 128,
-                         interpret: bool = True):
+                         interpret=None):
     """q,k (B,S,H,dk); v (B,S,H,dv); gates (B,S,H) raw.
 
     Fresh state (C=0, n=0, m=-inf). Returns (h (B,S,H,dv),
     state {C (B,H,dk,dv), n (B,H,dk), m (B,H)}).
+    ``interpret=None`` resolves from the platform dispatch policy.
     """
+    from repro.kernels.dispatch import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B, S, H, dk = q.shape
     dv = v.shape[-1]
     L = min(chunk, S)

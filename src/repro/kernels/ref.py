@@ -57,6 +57,18 @@ def signature_ref(x, tau: float = 0.05):
     return jnp.mean(flags.astype(jnp.float32), axis=0)
 
 
+def mlstm_chunkwise_ref(q, k, v, i_gate, f_gate):
+    """Fresh-state oracle for the chunkwise mLSTM kernel: the sequential
+    recurrent formulation from ``models.xlstm`` (the same ground truth the
+    kernel parity tests compare against), started from C=0, n=0, m=-inf."""
+    from repro.models.xlstm import mlstm_recurrent_ref
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    st0 = {"C": jnp.zeros((B, H, dk, dv)), "n": jnp.zeros((B, H, dk)),
+           "m": jnp.full((B, H), -1e30)}
+    return mlstm_recurrent_ref(q, k, v, i_gate, f_gate, st0)
+
+
 def slstm_scan_ref(gates_x, R, c0, n0, h0, m0):
     """Sequential oracle for the sLSTM kernel (same math as models.xlstm)."""
     d = R.shape[0]

@@ -48,11 +48,14 @@ def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
 
 
 def selective_scan_bsd(x, dt, A, Bc, Cc, h0, *, chunk: int = 256,
-                       interpret: bool = True):
+                       interpret=None):
     """x, dt (B,S,d_in) f32; A (d_in,N); Bc,Cc (B,S,N); h0 (B,d_in,N).
 
     Returns (y (B,S,d_in), h_last (B,d_in,N)).
+    ``interpret=None`` resolves from the platform dispatch policy.
     """
+    from repro.kernels.dispatch import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B, S, d_in = x.shape
     N = A.shape[1]
     c = min(chunk, S)

@@ -18,7 +18,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, out_ref, acc_ref, *, tau: float, block_t: int,
-            n_blocks: int, total_t: int):
+            n_blocks: int, total_t: int, mean: bool):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -36,12 +36,27 @@ def _kernel(x_ref, out_ref, acc_ref, *, tau: float, block_t: int,
 
     @pl.when(i == n_blocks - 1)
     def _emit():
-        out_ref[...] = acc_ref[...] / total_t
+        if mean:
+            out_ref[...] = acc_ref[...] / total_t
+        else:
+            out_ref[...] = acc_ref[...]
 
 
 def signature_td(x, *, tau: float = 0.05, block_t: int = 256,
-                 interpret: bool = True):
-    """x (T, d) -> per-channel zero-fraction (d,) f32."""
+                 mean: bool = True, interpret=None):
+    """x (T, d) -> per-channel zero-fraction (d,) f32.
+
+    ``mean=False`` emits the raw per-channel counts instead of fractions:
+    0/1 flag sums are exact integers in f32 (up to 2**24), so callers can
+    bucket and normalise them with the exact float ops of the jnp path
+    they must stay bit-consistent with (see ``ops.signature``) — whereas
+    a fraction cannot be multiplied back into an exact count.
+
+    ``interpret=None`` resolves from the platform dispatch policy
+    (``kernels.dispatch``): compiled on TPU, interpreted elsewhere.
+    """
+    from repro.kernels.dispatch import resolve_interpret
+    interpret = resolve_interpret(interpret)
     T, d = x.shape
     bt = min(block_t, T)
     n_blocks = -(-T // bt)
@@ -50,7 +65,7 @@ def signature_td(x, *, tau: float = 0.05, block_t: int = 256,
         x = jnp.pad(x, ((0, pad), (0, 0)), constant_values=1.0)
 
     kernel = functools.partial(_kernel, tau=tau, block_t=bt,
-                               n_blocks=n_blocks, total_t=T)
+                               n_blocks=n_blocks, total_t=T, mean=mean)
     return pl.pallas_call(
         kernel,
         grid=(n_blocks,),

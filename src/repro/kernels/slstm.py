@@ -75,11 +75,14 @@ def _kernel(gx_ref, r_ref, c0_ref, n0_ref, h0_ref, m0_ref,
 
 
 def slstm_scan_bsd(gates_x, R, c0, n0, h0, m0, *, chunk: int = 256,
-                   interpret: bool = True):
+                   interpret=None):
     """gates_x (B,S,4d) f32; R (d,4d); states (B,d).
 
     Returns (hs (B,S,d), (c,n,h,m) final states).
+    ``interpret=None`` resolves from the platform dispatch policy.
     """
+    from repro.kernels.dispatch import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B, S, d4 = gates_x.shape
     d = d4 // 4
     c = min(chunk, S)

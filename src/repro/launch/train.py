@@ -23,7 +23,8 @@ from repro.train.step import make_train_step
 
 
 def train_single(cfg, args):
-    runtime = Runtime(want_signature=True, use_pallas=args.pallas)
+    runtime = Runtime(want_signature=True, use_pallas=args.pallas,
+                      kernel_policy=args.kernel_policy or "auto")
     step, opt = make_train_step(cfg, runtime=runtime)
     jstep = jax.jit(step)
     key = jax.random.PRNGKey(args.seed)
@@ -59,7 +60,8 @@ def train_dagafl(cfg, args):
     from repro.fl.backend import LMBackend
 
     backend = LMBackend(cfg, lr=args.lr, local_steps=args.local_steps,
-                        batch_size=args.batch, seq_len=args.seq)
+                        batch_size=args.batch, seq_len=args.seq,
+                        kernel_policy=args.kernel_policy or None)
     streams = [make_lm_dataset(vocab=cfg.vocab_size, n_tokens=50_000,
                                order=1.5 + 0.5 * c, seed=c)
                for c in range(args.dagafl)]
@@ -67,7 +69,8 @@ def train_dagafl(cfg, args):
     global_test = make_lm_dataset(vocab=cfg.vocab_size, n_tokens=50_000,
                                   seed=999)
     dcfg = DagAflConfig(n_clients=args.dagafl, max_rounds=args.rounds,
-                        local_epochs=args.local_steps, seed=args.seed)
+                        local_epochs=args.local_steps, seed=args.seed,
+                        kernel_policy=args.kernel_policy or None)
     coord = DagAflCoordinator(backend, client_data, global_test, dcfg,
                               CostModel(), make_profiles(args.dagafl))
     res = coord.run()
@@ -86,6 +89,11 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--kernel-policy", default="",
+                    choices=["", "auto", "compiled", "interpret", "reference"],
+                    help="kernel dispatch policy for the Pallas hot paths "
+                         "(empty = incumbent stock-XLA math; see "
+                         "repro.kernels.dispatch)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--dagafl", type=int, default=0,

@@ -224,7 +224,7 @@ def scaled_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
         from repro.kernels import ops as kops
         return kops.flash_attention(q, k, v, causal=True, window=window,
                                     softcap=cap,
-                                    interpret=getattr(runtime, "pallas_interpret", True))
+                                    policy=kops.policy_from_runtime(runtime))
     if window > 0 and causal and Sq == Sk and Sq > _DENSE_MAX:
         return _banded_attn(q, k, v, q_pos, k_pos, window, cap)
     if max(Sq, Sk) <= _DENSE_MAX or Sq != Sk:

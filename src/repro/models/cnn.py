@@ -38,12 +38,16 @@ def init_cnn(key, cfg: CNNConfig):
     return params
 
 
-def cnn_forward(params, images, cfg: CNNConfig, want_signature: bool = False):
+def cnn_forward(params, images, cfg: CNNConfig, want_signature: bool = False,
+                kernel_policy=None):
     """images (B, H, W, C) -> (logits (B, n_classes), signature | None).
 
     The signature is the paper's Eq. 3-4: per-channel zero fraction of the
-    ``signature_layer``-th conv feature map, averaged over the batch.
+    ``signature_layer``-th conv feature map, averaged over the batch —
+    computed through the kernel dispatch layer (``kernel_policy=None`` ->
+    ``"reference"``: the pure-jnp incumbent bits).
     """
+    from repro.kernels import ops as kops
     x = images
     sig = None
     conv_idx = 0
@@ -55,7 +59,8 @@ def cnn_forward(params, images, cfg: CNNConfig, want_signature: bool = False):
             x = jax.nn.relu(x + p["b"])
             if want_signature and conv_idx == cfg.signature_layer:
                 # zero(F_k(x)) / (H*W), averaged over samples (Eq. 3-4)
-                zero_frac = jnp.mean((x == 0.0).astype(jnp.float32), axis=(1, 2))
+                zero_frac = kops.signature_per_channel(
+                    x, tau=0.0, policy=kernel_policy or "reference")
                 sig = jnp.mean(zero_frac, axis=0)            # (channels,)
             conv_idx += 1
         x = jax.lax.reduce_window(

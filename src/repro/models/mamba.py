@@ -87,7 +87,7 @@ def mamba_forward(params, x, *, cfg: ArchConfig, state=None, runtime=None):
         from repro.kernels import ops as kops
         y, h_last = kops.selective_scan(
             xbf, dt, A, Bc, Cc, state["h"], chunk=mc.chunk,
-            interpret=getattr(runtime, "pallas_interpret", True))
+            policy=kops.policy_from_runtime(runtime))
     else:
         y, h_last = selective_scan_ref(xbf, dt, A, Bc, Cc, state["h"],
                                        chunk=mc.chunk)

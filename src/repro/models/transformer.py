@@ -22,9 +22,9 @@ from repro.models import attention as attn
 from repro.models import mamba as mam
 from repro.models import moe as moe_mod
 from repro.models import xlstm as xl
-from repro.models.layers import (activation_signature, apply_mlp, apply_norm,
-                                 cross_entropy, embed_tokens, init_embedding,
-                                 init_mlp, init_norm, unembed)
+from repro.models.layers import (apply_mlp, apply_norm, cross_entropy,
+                                 embed_tokens, init_embedding, init_mlp,
+                                 init_norm, unembed)
 from repro.runtime import DEFAULT, Runtime
 
 
@@ -341,8 +341,10 @@ def forward_hidden(params, batch, cfg: ArchConfig, runtime: Runtime = DEFAULT,
     x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
     aux = {"moe_aux": aux_total}
     if runtime.want_signature:
-        aux["signature"] = activation_signature(
-            x, runtime.signature_dims, runtime.signature_tau)
+        from repro.kernels import ops as kops
+        aux["signature"] = kops.signature(
+            x, tau=runtime.signature_tau, n_sig=runtime.signature_dims,
+            policy=kops.policy_from_runtime(runtime))
     return x, aux, caches
 
 
@@ -355,10 +357,15 @@ def per_sample_signature(h, runtime: Runtime = DEFAULT):
     length average back to the fused signature exactly, so the two paths
     agree whenever no padding is present.
     h: (B, S, d) activations of the designated layer (the final-norm
-    output, matching ``Runtime.want_signature``).
+    output, matching ``Runtime.want_signature``).  Routed through the
+    kernel dispatch layer; the policy (hence the compiled branch) is
+    resolved once, outside the vmap.
     """
-    return jax.vmap(lambda row: activation_signature(
-        row, runtime.signature_dims, runtime.signature_tau))(h)
+    from repro.kernels import ops as kops
+    policy = kops.policy_from_runtime(runtime)
+    return jax.vmap(lambda row: kops.signature(
+        row, tau=runtime.signature_tau, n_sig=runtime.signature_dims,
+        policy=policy))(h)
 
 
 def forward(params, batch, cfg: ArchConfig, runtime: Runtime = DEFAULT,

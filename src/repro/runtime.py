@@ -10,7 +10,13 @@ from typing import Any, Optional, Tuple
 @dataclass(frozen=True)
 class Runtime:
     use_pallas: bool = False       # route hot-spots through Pallas kernels
-    pallas_interpret: bool = True  # CPU container: interpret mode
+    # kernel dispatch policy for those hot-spots (repro.kernels.dispatch):
+    # "auto" resolves via $REPRO_KERNEL_POLICY then the platform (TPU ->
+    # "compiled", else "interpret"); "reference" forces the pure-jnp
+    # oracles.  Supersedes pallas_interpret, which remains only as a
+    # legacy explicit override consumed by kernels.dispatch.
+    kernel_policy: str = "auto"
+    pallas_interpret: Optional[bool] = None  # legacy; None = follow policy
     remat: bool = True             # checkpoint scanned periods in training
     want_signature: bool = False   # emit DAG-AFL feature signature in aux
     signature_tau: float = 0.05

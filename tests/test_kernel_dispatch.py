@@ -1,0 +1,289 @@
+"""Kernel dispatch layer: policy resolution + hot-path swap parity.
+
+The swaps under test route the Eq. 3 signatures (CNN exact-zero rows, LM
+threshold-zero buckets) and the LM attention through ``repro.kernels.ops``.
+Signatures feed tip selection through the similarity contract, so the
+signature swaps must be BIT-identical to the incumbent jnp math — not
+merely allclose — on every policy, shape, and execution discipline (eager,
+jit, vmap, 1-D and 2-D shard_map).  Attention is ordinary floating-point
+kernel work and gets an allclose budget.
+
+Multi-device cases skip on single-device hosts; CI's multi-device job
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) runs them on the
+8x1 and 4x2 meshes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels.dispatch import (POLICY_ENV, policy_from_runtime,
+                                    resolve_interpret, resolve_policy)
+from repro.models.layers import activation_signature
+from repro.runtime import Runtime
+
+N_DEV = len(jax.devices())
+
+
+def _bit_equal(a, b, msg=""):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype and a.shape == b.shape
+    assert np.array_equal(a, b), (
+        f"{msg}: max |diff| {np.max(np.abs(a - b))} over "
+        f"{np.sum(a != b)}/{a.size} mismatched entries")
+
+
+# ---------------------------------------------------------------------------
+# policy resolution
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_policy_platform_default(monkeypatch):
+    monkeypatch.delenv(POLICY_ENV, raising=False)
+    expected = "compiled" if jax.default_backend() == "tpu" else "interpret"
+    assert resolve_policy(None) == expected
+    assert resolve_policy("auto") == expected
+
+
+def test_resolve_policy_explicit_beats_env(monkeypatch):
+    monkeypatch.setenv(POLICY_ENV, "compiled")
+    assert resolve_policy("reference") == "reference"
+    assert resolve_policy(None) == "compiled"
+    assert resolve_policy("auto") == "compiled"
+
+
+def test_resolve_policy_env_auto_falls_through(monkeypatch):
+    monkeypatch.setenv(POLICY_ENV, "auto")
+    expected = "compiled" if jax.default_backend() == "tpu" else "interpret"
+    assert resolve_policy(None) == expected
+
+
+def test_resolve_policy_rejects_unknown(monkeypatch):
+    with pytest.raises(ValueError, match="unknown kernel policy"):
+        resolve_policy("vectorized")
+    monkeypatch.setenv(POLICY_ENV, "turbo")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_POLICY"):
+        resolve_policy(None)
+
+
+def test_resolve_interpret_explicit_wins():
+    assert resolve_interpret(True, "compiled") is True
+    assert resolve_interpret(False, "interpret") is False
+    assert resolve_interpret(None, "compiled") is False
+    assert resolve_interpret(None, "interpret") is True
+    assert resolve_interpret(None, "reference") is True
+
+
+def test_policy_from_runtime():
+    assert policy_from_runtime(None) == "reference"
+    assert policy_from_runtime(Runtime()) == "reference"
+    assert policy_from_runtime(
+        Runtime(use_pallas=True, kernel_policy="interpret")) == "interpret"
+    assert policy_from_runtime(
+        Runtime(use_pallas=True, kernel_policy="reference")) == "reference"
+    # legacy pallas_interpret still forces the mode when set explicitly
+    assert policy_from_runtime(
+        Runtime(use_pallas=True, pallas_interpret=True)) == "interpret"
+    assert policy_from_runtime(
+        Runtime(use_pallas=True, pallas_interpret=False)) == "compiled"
+
+
+def test_policy_from_runtime_env_override(monkeypatch):
+    monkeypatch.setenv(POLICY_ENV, "reference")
+    assert policy_from_runtime(
+        Runtime(use_pallas=True, kernel_policy="auto")) == "reference"
+
+
+# ---------------------------------------------------------------------------
+# ops.signature: bit-consistency with models.layers.activation_signature
+# ---------------------------------------------------------------------------
+
+
+def _activations(shape, seed=0, kill=0.3):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    return jnp.where(jnp.abs(x) < kill, 0.0, x)
+
+
+# d=100/n_sig=64 is the regression case for the bucket-padding bias: with
+# d % n_sig != 0 the buckets must see zero-padded tail channels, exactly
+# like activation_signature's zero-padded flag columns — NOT a truncated
+# or rescaled bucket width.
+@pytest.mark.parametrize("T,d,n_sig", [(12, 128, 64), (7, 100, 64),
+                                       (30, 64, 64), (5, 65, 64),
+                                       (16, 33, 8), (1, 64, 64)])
+@pytest.mark.parametrize("policy", ["reference", "interpret"])
+def test_signature_bit_matches_activation_signature(T, d, n_sig, policy):
+    x = _activations((T, d), seed=d)
+    expect = activation_signature(x, n_sig=n_sig, tau=0.05)
+    got = kops.signature(x, tau=0.05, n_sig=n_sig, policy=policy)
+    _bit_equal(got, expect, f"policy={policy} d={d} n_sig={n_sig}")
+
+
+@pytest.mark.parametrize("policy", ["reference", "interpret"])
+def test_signature_bit_stable_under_jit_and_vmap(policy):
+    x = _activations((4, 9, 100), seed=3)
+    flat = x.reshape(4, -1)          # per-sample rows, d=900? no: (4, 900)
+    f = lambda row: kops.signature(row, tau=0.05, n_sig=64, policy=policy)
+    eager = jnp.stack([f(r) for r in flat])
+    vmapped = jax.vmap(f)(flat)
+    jitted = jax.jit(jax.vmap(f))(flat)
+    expect = jnp.stack([activation_signature(r, n_sig=64, tau=0.05)
+                        for r in flat])
+    _bit_equal(eager, expect, f"eager policy={policy}")
+    _bit_equal(vmapped, expect, f"vmap policy={policy}")
+    _bit_equal(jitted, expect, f"jit(vmap) policy={policy}")
+
+
+def test_signature_tau_zero_counts_exact_zeros():
+    x = jnp.asarray([[0.0, 1.0, 0.02, 0.0], [0.0, 0.0, 3.0, -0.01]])
+    got = kops.signature(x, tau=0.0, n_sig=4, policy="interpret")
+    expect = jnp.mean((x == 0.0).astype(jnp.float32), axis=0)
+    _bit_equal(got, expect, "tau=0 exact-zero semantics")
+
+
+# ---------------------------------------------------------------------------
+# ops.signature_per_channel: bit-consistency with the CNN incumbent
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(3, 8, 8, 16), (2, 7, 7, 10),
+                                   (1, 28, 28, 32), (5, 3, 3, 1)])
+@pytest.mark.parametrize("policy", ["reference", "interpret"])
+def test_signature_per_channel_bit_matches_jnp(shape, policy):
+    x = jax.nn.relu(_activations(shape, seed=shape[-1], kill=0.0) - 0.4)
+    expect = jnp.mean((x == 0.0).astype(jnp.float32), axis=(1, 2))
+    got = kops.signature_per_channel(x, tau=0.0, policy=policy)
+    _bit_equal(got, expect, f"policy={policy} shape={shape}")
+
+
+def test_signature_per_channel_bit_stable_under_jit():
+    x = jax.nn.relu(_activations((4, 14, 14, 20), seed=9, kill=0.0) - 0.3)
+    expect = jnp.mean((x == 0.0).astype(jnp.float32), axis=(1, 2))
+    for policy in ("reference", "interpret"):
+        got = jax.jit(lambda a: kops.signature_per_channel(
+            a, tau=0.0, policy=policy))(x)
+        _bit_equal(got, expect, f"jit policy={policy}")
+
+
+# ---------------------------------------------------------------------------
+# model hot paths: cnn_forward / per_sample_signature policy on vs off
+# ---------------------------------------------------------------------------
+
+
+def _cnn_world():
+    from repro.configs.cnn import vgg_for
+    from repro.models import cnn as cnn_mod
+    cfg = vgg_for("mnist")
+    params = cnn_mod.init_cnn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(
+        jax.random.PRNGKey(1), (6, cfg.image_size, cfg.image_size,
+                                cfg.in_channels))
+    return cnn_mod, cfg, params, x
+
+
+def test_cnn_forward_signature_policy_bit_equal():
+    cnn_mod, cfg, params, x = _cnn_world()
+    _, sig_ref = cnn_mod.cnn_forward(params, x, cfg, want_signature=True)
+    _, sig_int = cnn_mod.cnn_forward(params, x, cfg, want_signature=True,
+                                     kernel_policy="interpret")
+    assert sig_ref is not None and sig_int is not None
+    _bit_equal(sig_int, sig_ref, "cnn_forward kernel_policy on vs off")
+
+
+def test_per_sample_signature_policy_bit_equal():
+    from repro.models import transformer as tfm
+    h = _activations((3, 17, 100), seed=7)
+    off = tfm.per_sample_signature(h, Runtime(want_signature=True))
+    on = tfm.per_sample_signature(
+        h, Runtime(want_signature=True, use_pallas=True,
+                   kernel_policy="interpret"))
+    _bit_equal(on, off, "per_sample_signature use_pallas on vs off")
+
+
+# ---------------------------------------------------------------------------
+# LM attention swap: allclose vs the stock-XLA path
+# ---------------------------------------------------------------------------
+
+
+def test_lm_forward_hidden_pallas_attention_close():
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.models import transformer as tfm
+    cfg = dataclasses.replace(reduced(get_config("internlm2-1.8b")),
+                              compute_dtype="float32", d_model=64,
+                              vocab_size=128)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    rt_off = Runtime(want_signature=False)
+    rt_on = Runtime(want_signature=False, use_pallas=True,
+                    kernel_policy="interpret")
+    h_off, _, _ = tfm.forward_hidden(params, {"tokens": toks}, cfg, rt_off,
+                                     mode="prefill")
+    h_on, _, _ = tfm.forward_hidden(params, {"tokens": toks}, cfg, rt_on,
+                                    mode="prefill")
+    np.testing.assert_allclose(np.asarray(h_on), np.asarray(h_off),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# cohort engine parity: the full Eq. 3 path, single-device + meshes
+# ---------------------------------------------------------------------------
+
+
+def _cohort_engines(mesh_spec, kernel_policy, cohort=4):
+    from repro.configs.cnn import vgg_for
+    from repro.data import make_benchmark_dataset, split_811
+    from repro.data.synthetic import Dataset
+    from repro.fl.backend import CNNBackend
+    from repro.fl.cohort import build_cohort_engine
+
+    ds = make_benchmark_dataset("mnist", n_samples=400, seed=5)
+    train = split_811(ds)["train"]
+    rng = np.random.default_rng(0)
+    shards = []
+    for s in (70, 50, 64, 33):
+        idx = rng.choice(len(train), size=s, replace=False)
+        shards.append(Dataset(train.x[idx], train.y[idx]))
+    backend = CNNBackend(vgg_for("mnist"), local_epochs=1, batch_size=32)
+    engine = build_cohort_engine(backend, shards, cohort_size=cohort,
+                                 mesh=mesh_spec, epochs=1,
+                                 kernel_policy=kernel_policy)
+    assert engine is not None
+    params = [backend.init(jax.random.PRNGKey(c)) for c in range(cohort)]
+    return engine, params, shards
+
+
+@pytest.mark.parametrize("mesh_spec", [
+    None,
+    pytest.param("auto", marks=pytest.mark.skipif(
+        N_DEV < 2, reason="needs >=2 devices for a real clients mesh")),
+    pytest.param("4x2", marks=pytest.mark.skipif(
+        N_DEV < 8, reason="needs 8 devices for the 4x2 (clients, data) mesh")),
+])
+def test_cohort_signature_kernel_policy_bit_equal(mesh_spec):
+    from repro.core.aggregate import tree_stack
+    engine_ref, params, shards = _cohort_engines(mesh_spec, None)
+    engine_int, _, _ = _cohort_engines(mesh_spec, "interpret")
+    assert engine_ref.programs.kernel_policy == "reference"
+    assert engine_int.programs.kernel_policy == "interpret"
+    stacked = tree_stack(params)
+    sig_ref = engine_ref.signature_cohort_stacked(stacked, shards, limit=48)
+    sig_int = engine_int.signature_cohort_stacked(stacked, shards, limit=48)
+    _bit_equal(sig_int, sig_ref,
+               f"cohort signatures, mesh={mesh_spec}")
+
+
+@pytest.mark.skipif(N_DEV < 2, reason="needs >=2 devices")
+def test_cohort_signature_mesh_matches_single_device():
+    """Same policy, mesh vs no mesh: the sharded kernel path must agree
+    with the single-device kernel path bit-for-bit (counts are exact)."""
+    from repro.core.aggregate import tree_stack
+    engine_one, params, shards = _cohort_engines(None, "interpret")
+    engine_mesh, _, _ = _cohort_engines("auto", "interpret")
+    stacked = tree_stack(params)
+    a = engine_one.signature_cohort_stacked(stacked, shards, limit=48)
+    b = engine_mesh.signature_cohort_stacked(stacked, shards, limit=48)
+    _bit_equal(b, a, "interpret kernel, mesh vs single-device")

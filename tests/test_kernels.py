@@ -147,6 +147,105 @@ def test_signature_bucketing():
     np.testing.assert_allclose(np.asarray(sig), [1.0, 0.0], atol=1e-6)
 
 
+# ragged T x odd d, tau=0 (exact zeros) and tau>0 (threshold band)
+SIG_COUNT_CASES = [(1, 1, 0.0), (7, 13, 0.0), (100, 100, 0.05),
+                   (33, 257, 0.1), (256, 64, 0.0), (5, 300, 0.05)]
+
+
+@pytest.mark.parametrize("T,d,tau", SIG_COUNT_CASES)
+def test_signature_td_count_mode_is_exact(T, d, tau):
+    """mean=False emits EXACT integer per-channel counts — the invariant
+    the dispatch layer's bit-stable bucketing is built on."""
+    x = jax.random.normal(jax.random.PRNGKey(T * d), (T, d))
+    x = jnp.where(jnp.abs(x) < 0.2, 0.0, x)
+    counts = signature_td(x, tau=tau, block_t=32, mean=False, interpret=True)
+    xn = np.asarray(x)
+    expect = ((xn == 0.0) if tau <= 0.0
+              else (np.abs(xn) < tau)).sum(axis=0).astype(np.float32)
+    assert np.array_equal(np.asarray(counts), expect)
+
+
+def test_signature_td_padding_tail_rows_excluded():
+    """T not divisible by block_t: padded rows must not count as zeros."""
+    x = jnp.ones((33, 8)) * 5.0           # no zeros anywhere
+    out = signature_td(x, tau=0.0, block_t=32, mean=False, interpret=True)
+    assert np.array_equal(np.asarray(out), np.zeros(8, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# dispatch-layer parity: every ops wrapper, interpret vs reference policy
+# ---------------------------------------------------------------------------
+
+
+def _op_pair(name):
+    """Build inputs + a runner f(policy) for one ops wrapper; shapes are
+    deliberately ragged (odd S/d, GQA K<H, padding tails)."""
+    if name == "flash_attention":
+        ks = jax.random.split(jax.random.PRNGKey(31), 3)
+        q = jax.random.normal(ks[0], (2, 130, 4, 32))        # (B,S,H,hd)
+        k = jax.random.normal(ks[1], (2, 130, 2, 32))        # GQA K=2
+        v = jax.random.normal(ks[2], (2, 130, 2, 32))
+        return lambda p: ops.flash_attention(q, k, v, window=48, policy=p)
+    if name == "selective_scan":
+        ks = jax.random.split(jax.random.PRNGKey(32), 6)
+        B, S, d_in, N = 2, 77, 8, 4
+        x = jax.random.normal(ks[0], (B, S, d_in))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, d_in)))
+        A = -jnp.exp(jax.random.normal(ks[2], (d_in, N)) * 0.5)
+        Bc = jax.random.normal(ks[3], (B, S, N))
+        Cc = jax.random.normal(ks[4], (B, S, N))
+        h0 = jax.random.normal(ks[5], (B, d_in, N)) * 0.1
+        return lambda p: ops.selective_scan(x, dt, A, Bc, Cc, h0, chunk=32,
+                                            policy=p)
+    if name == "signature":
+        x = jax.random.normal(jax.random.PRNGKey(33), (45, 100))  # d%64 != 0
+        x = jnp.where(jnp.abs(x) < 0.2, 0.0, x)
+        return lambda p: ops.signature(x, tau=0.05, n_sig=64, policy=p)
+    if name == "signature_per_channel":
+        x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(34),
+                                          (3, 9, 9, 11)) - 0.3)
+        return lambda p: ops.signature_per_channel(x, tau=0.0, policy=p)
+    if name == "slstm_scan":
+        ks = jax.random.split(jax.random.PRNGKey(35), 2)
+        B, S, d = 1, 50, 16
+        gx = jax.random.normal(ks[0], (B, S, 4 * d))
+        R = jax.random.normal(ks[1], (d, 4 * d)) * 0.05
+        z = jnp.zeros((B, d))
+        m0 = jnp.full((B, d), -1e30)
+        return lambda p: ops.slstm_scan(gx, R, z, z, z, m0, chunk=16,
+                                        policy=p)
+    assert name == "mlstm_chunkwise"
+    ks = jax.random.split(jax.random.PRNGKey(36), 5)
+    B, S, H, dk, dv = 1, 70, 2, 16, 24
+    q = jax.random.normal(ks[0], (B, S, H, dk))
+    k = jax.random.normal(ks[1], (B, S, H, dk))
+    v = jax.random.normal(ks[2], (B, S, H, dv))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    return lambda p: ops.mlstm_chunkwise(q, k, v, ig, fg, chunk=32,
+                                         policy=p)[0]
+
+
+OP_NAMES = ["flash_attention", "selective_scan", "signature",
+            "signature_per_channel", "slstm_scan", "mlstm_chunkwise"]
+
+
+@pytest.mark.parametrize("name", OP_NAMES)
+def test_ops_interpret_policy_matches_reference(name):
+    run = _op_pair(name)
+    got = run("interpret")
+    expect = run("reference")
+    tol = 1e-4 if name == "mlstm_chunkwise" else 1e-5
+    for g, e in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(expect)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                   rtol=tol, atol=tol)
+    if name.startswith("signature"):    # Eq. 3 paths must be BIT-equal
+        for g, e in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(expect)):
+            assert np.array_equal(np.asarray(g), np.asarray(e))
+
+
 # ---------------------------------------------------------------------------
 # sLSTM recurrence kernel (R-resident, inference path)
 # ---------------------------------------------------------------------------

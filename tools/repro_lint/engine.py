@@ -92,7 +92,8 @@ def _ensure_rules_loaded():
     if not _RULES_LOADED:
         # imported for their @register side effects
         from tools.repro_lint import (rules_api,  # noqa: F401
-                                      rules_determinism, rules_jax)
+                                      rules_determinism, rules_jax,
+                                      rules_kernels)
         _RULES_LOADED = True
 
 

@@ -1,0 +1,97 @@
+"""Kernel-dispatch hygiene rules (KER0xx).
+
+PR "Pallas kernels on the federated hot path" routed the Eq. 3
+threshold-zero signatures and the LM attention softmax through the
+platform-aware dispatch layer (``repro.kernels.ops`` +
+``repro.kernels.dispatch``).  The hot paths stay routed only if nobody
+reintroduces the raw-jnp math or hardcodes the interpreter flag:
+
+* a ``jnp.mean``/``jnp.sum`` over an ``== 0.0`` comparison in
+  ``src/repro/fl``/``src/repro/models`` is an Eq. 3 signature computed
+  outside the dispatch layer — it silently forks the signature math the
+  DAG's tip selection depends on (``models/layers.py`` is exempt: it
+  holds the canonical oracle the kernels are parity-tested against);
+* a ``jax.nn.softmax`` there is an attention/score path bypassing
+  ``kernels.ops.flash_attention`` (``models/attention.py`` owns the
+  XLA fallbacks and ``models/moe.py``'s router softmax is not an
+  attention; both are exempt);
+* a literal ``interpret=True/False`` outside ``src/repro/kernels``
+  pins one platform's execution mode into shared code — call sites
+  must pass ``policy=`` (or nothing) and let the dispatch layer
+  resolve the flag per platform.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.repro_lint.engine import (Finding, ModuleContext, Rule, qualname,
+                                     register)
+
+_HOT_TREES = ("src/repro/fl/", "src/repro/models/")
+_REDUCERS = {"jnp.mean", "jnp.sum", "jax.numpy.mean", "jax.numpy.sum"}
+_SIG_EXEMPT = ("src/repro/models/layers.py",)
+_SOFTMAX_EXEMPT = ("src/repro/models/attention.py", "src/repro/models/moe.py")
+_KERNEL_TREE = "src/repro/kernels/"
+
+
+def _contains_zero_compare(node: ast.AST) -> bool:
+    """True when the subtree holds an ``== 0.0`` comparison (either side)."""
+    for sub in ast.walk(node):
+        if not (isinstance(sub, ast.Compare) and len(sub.ops) == 1
+                and isinstance(sub.ops[0], ast.Eq)):
+            continue
+        for side in (sub.left, sub.comparators[0]):
+            if isinstance(side, ast.Constant) and side.value == 0.0 \
+                    and isinstance(side.value, float):
+                return True
+    return False
+
+
+@register
+class HotPathKernelBypassRule(Rule):
+    id = "KER001"
+    name = "hot-path-kernel-bypass"
+    family = "kernel-dispatch"
+    description = ("Eq. 3 signatures / attention softmax computed with raw "
+                   "jnp on the federated hot path, or a literal interpret= "
+                   "flag outside the kernel package — route through "
+                   "repro.kernels.ops and its dispatch policy")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        rel = ctx.rel_path
+        in_src = "src/repro/" in rel and _KERNEL_TREE not in rel
+        in_hot = any(t in rel for t in _HOT_TREES)
+        if not in_src:
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                qn = qualname(node.func)
+                if in_hot and qn in _REDUCERS and \
+                        not any(rel.endswith(p) for p in _SIG_EXEMPT) and \
+                        any(_contains_zero_compare(a) for a in node.args):
+                    yield self.finding(
+                        ctx, node,
+                        f"'{qn}' over an '== 0.0' comparison is an Eq. 3 "
+                        "threshold-zero signature computed outside the "
+                        "kernel dispatch layer — use kernels.ops.signature"
+                        "/signature_per_channel so the policy (and the "
+                        "bit-stable bucketing) stays in one place")
+                elif in_hot and qn == "jax.nn.softmax" and \
+                        not any(rel.endswith(p) for p in _SOFTMAX_EXEMPT):
+                    yield self.finding(
+                        ctx, node,
+                        "'jax.nn.softmax' on the federated hot path "
+                        "bypasses kernels.ops.flash_attention — score "
+                        "paths belong behind the dispatch layer (XLA "
+                        "fallbacks live in models/attention.py)")
+                for kw in node.keywords:
+                    if kw.arg == "interpret" and \
+                            isinstance(kw.value, ast.Constant) and \
+                            isinstance(kw.value.value, bool):
+                        yield self.finding(
+                            ctx, kw.value,
+                            f"literal 'interpret={kw.value.value}' outside "
+                            "src/repro/kernels pins one platform's "
+                            "execution mode — pass policy= and let "
+                            "kernels.dispatch resolve the flag")

@@ -1,0 +1,30 @@
+"""KER001 clean fixture — linted as-if at src/repro/fl/fixture.py."""
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def sample_signature(params, x, policy):
+    # Eq. 3 through the dispatch layer: no raw threshold-zero reduction
+    return kops.signature_per_channel(x, tau=0.0, policy=policy)
+
+
+def masked_mean(per_row, mask):
+    # reductions without an == 0.0 comparison are ordinary math
+    return jnp.sum(per_row * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def count_exact_epoch(epochs):
+    # integer == 0 (not the float literal) is host control flow, not Eq. 3
+    return jnp.sum(jnp.asarray(epochs) == 0)
+
+
+def attention(q, k, v, runtime):
+    # attention through the dispatch layer, platform resolved by policy
+    return kops.flash_attention(q, k, v,
+                                policy=kops.policy_from_runtime(runtime))
+
+
+def interpreted_by_policy(x):
+    # interpret resolved from the policy, not hardcoded
+    return kops.signature(x, tau=0.0, policy="interpret")

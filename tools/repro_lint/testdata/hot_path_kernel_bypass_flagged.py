@@ -1,0 +1,27 @@
+"""KER001 flagged fixture — linted as-if at src/repro/fl/fixture.py."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import signature_td
+
+
+def sample_signature(params, x):
+    # leg A: Eq. 3 zero-fraction computed with raw jnp on the hot path
+    return jnp.mean((x == 0.0).astype(jnp.float32), axis=(1, 2))
+
+
+def signature_sum_form(x):
+    # leg A also covers the sum-form variant
+    return jnp.sum((0.0 == x).astype(jnp.float32), axis=1)
+
+
+def attention_scores(q, k, v):
+    s = q @ k.T
+    # leg B: softmax score path outside models/attention.py
+    w = jax.nn.softmax(s, axis=-1)
+    return w @ v
+
+
+def forced_interpreter(x):
+    # leg C: literal interpret= outside src/repro/kernels
+    return signature_td(x, tau=0.0, interpret=True)
