@@ -2,8 +2,13 @@
 
 Dispatches on the results file's ``kind`` field: ``ledger_day`` results
 (written by ``benchmarks/ledger_perf.py``) are gated on the bounded-frontier
-invariants under the ``ledger_day`` thresholds sub-dict; everything else is
-a cohort smoke (written by ``benchmarks/chain_perf.py --cohort-size K``).
+invariants under the ``ledger_day`` thresholds sub-dict; ``robustness``
+results (``benchmarks/robustness.py``) on fault-event counts and accuracy
+deltas; ``serve`` results (``benchmarks/serve_perf.py``) on deterministic
+serving counters (replica versions, queries, seq-staleness) plus exact
+replica-vs-direct Eq. 6 parity flags; ``kernel_perf`` results on analytic
+memory-footprint ratios; everything else is a cohort smoke (written by
+``benchmarks/chain_perf.py --cohort-size K``).
 Both compare against the checked-in floors in
 ``benchmarks/baseline_thresholds.json`` and exit non-zero on regression.
 
@@ -242,6 +247,70 @@ def check_robustness(results: dict, thresholds: dict) -> list:
     return failures
 
 
+def check_serve(results: dict, thresholds: dict) -> list:
+    """Gate a ``kind=serve`` results file (benchmarks/serve_perf.py).
+
+    Everything gated is a deterministic event count (replica versions,
+    queries served, staleness in ledger append seqs) or an exact-parity
+    flag; wall-clock throughput is reported, never gated.  Per-backend
+    floors live under the ``serve`` thresholds sub-dict, keyed by backend.
+    """
+    failures = []
+    t = thresholds.get("serve", {})
+    backends = results.get("backends", {})
+    if not backends:
+        failures.append("results carry no backends")
+    for name, b in backends.items():
+        bt = {k: v for k, v in t.items() if not isinstance(v, dict)}
+        bt.update(t.get(name, {}))
+        s = b.get("serving", {})
+
+        def floor(key, floor_key):
+            limit = bt.get(floor_key)
+            if limit is not None and s.get(key, 0) < limit:
+                failures.append(f"{name}: {key} {s.get(key, 0)} below "
+                                f"{limit} — serving never got going")
+
+        def ceiling(key, ceil_key):
+            limit = bt.get(ceil_key)
+            if limit is not None and s.get(key, 0) > limit:
+                failures.append(f"{name}: {key} {s.get(key, 0)} above "
+                                f"{limit} — replicas went stale past the "
+                                "publish-cadence budget")
+
+        floor("replica_versions", "replica_versions_min")
+        floor("queries", "queries_min")
+        floor("distinct_versions_served", "distinct_versions_min")
+        ceiling("max_seq_lag", "max_seq_lag_max")
+        ceiling("mean_seq_lag", "mean_seq_lag_max")
+        if s.get("skipped", 0) != 0:
+            failures.append(f"{name}: {s['skipped']} queries arrived before "
+                            "any replica existed — the publisher must "
+                            "publish v0 at start")
+        par = b.get("parity", {})
+        for flag in ("params_bitwise", "direct_bitwise", "output_parity",
+                     "pinned_resident"):
+            if not par.get(flag, False):
+                failures.append(
+                    f"{name}: parity flag '{flag}' is false — the replica "
+                    "is not bit-identical to direct Eq. 6 aggregation over "
+                    "its frontier (probe: "
+                    f"{par.get('parity_probe', '?')})")
+        if bt.get("require_pruning") and b.get("n_pruned", 0) < 1:
+            failures.append(f"{name}: bounded-ledger leg pruned nothing — "
+                            "eviction protection was never exercised")
+        det = b.get("determinism")
+        if t.get("determinism_required", True):
+            if det is None:
+                failures.append(f"{name}: no determinism leg (run without "
+                                "--no-determinism)")
+            elif not det.get("counters_match"):
+                failures.append(
+                    f"{name}: same-seed rerun diverged on counters "
+                    f"{det.get('mismatched_keys')}")
+    return failures
+
+
 # the three hot-path swaps kernel_perf.py must cover (ISSUE 9 tentpole)
 KERNEL_PERF_OPS = ("signature", "signature_per_channel", "flash_attention")
 
@@ -308,6 +377,8 @@ def check(results: dict, thresholds: dict, quick: bool = False) -> list:
         return check_robustness(results, thresholds)
     if results.get("kind") == "kernel_perf":
         return check_kernel_perf(results, thresholds)
+    if results.get("kind") == "serve":
+        return check_serve(results, thresholds)
     failures = []
     thresholds = active_thresholds(thresholds, results)
     floor = thresholds["cohort_speedup_min"]
@@ -394,6 +465,28 @@ def main() -> None:
                   f"tampered/detected={dag.get('txs_tampered', 0)}/"
                   f"{dag.get('tamper_detections', 0)} "
                   f"deterministic={bool(det.get('counts_match')) and bool(det.get('detections_match'))}")
+        if failures:
+            for msg in failures:
+                print(f"PERF GATE FAIL: {msg}", file=sys.stderr)
+            sys.exit(1)
+        print("perf gate: PASS")
+        return
+    if results.get("kind") == "serve":
+        for name, b in results.get("backends", {}).items():
+            s = b.get("serving", {})
+            det = b.get("determinism", {})
+            par = b.get("parity", {})
+            print(f"perf gate[serve/{name}]: "
+                  f"replicas={s.get('replica_versions')} "
+                  f"queries={s.get('queries')} "
+                  f"seq_lag={s.get('mean_seq_lag', float('nan')):.2f}/"
+                  f"{s.get('max_seq_lag')} (mean/max) "
+                  f"versions_served={s.get('distinct_versions_served')} "
+                  f"parity={par.get('params_bitwise')}/"
+                  f"{par.get('output_parity')} "
+                  f"deterministic={det.get('counters_match')} "
+                  f"[{s.get('queries_per_s', float('nan')):.1f} q/s "
+                  "wall, not gated]")
         if failures:
             for msg in failures:
                 print(f"PERF GATE FAIL: {msg}", file=sys.stderr)

@@ -35,7 +35,20 @@ def main() -> None:
                          "(repeatable; 'all' = the full matrix) — the same "
                          "entrypoint CI's robustness job uses "
                          "(benchmarks/robustness.py)")
+    ap.add_argument("--serve", action="store_true",
+                    help="run ONLY the live-traffic serving benchmark "
+                         "(frontier -> replica publication under a query "
+                         "stream) — the same entrypoint CI's serve smoke "
+                         "uses (benchmarks/serve_perf.py)")
     args = ap.parse_args()
+
+    if args.serve:
+        from benchmarks import serve_perf
+        report = serve_perf.run_serve_perf(quick=not args.full)
+        print("name,us_per_call,derived")
+        for r in serve_perf.rows(report):
+            print(r)
+        return
 
     if args.scenario:
         from benchmarks import fl_tables, robustness

@@ -145,6 +145,8 @@ class LedgerView(Protocol):
 
     def latest_of(self, client_id: int) -> Optional[str]: ...
 
+    def head_seq(self) -> int: ...
+
     def reachable_tips(self, start_node: Optional[str],
                        within: Optional[Iterable[str]] = None
                        ) -> Tuple[List[str], List[str]]: ...
@@ -290,6 +292,14 @@ class DAGLedger:
         """O(1): served from the per-client index maintained in _make_tx."""
         entry = self._latest.get(client_id)
         return entry[0] if entry is not None else None
+
+    def head_seq(self) -> int:
+        """Append seq of the most recent transaction (-1 before genesis).
+        Monotone across pruning — this is the ledger-position clock that
+        serving staleness (frontier-to-replica lag) is measured against:
+        unlike wall/sim time it advances exactly once per publish, so lag
+        counters are deterministic event counts."""
+        return self._counter - 1
 
     def reachable_tips(self, start_node: Optional[str],
                        within: Optional[Iterable[str]] = None

@@ -71,6 +71,12 @@ class EventLoop:
         # path legitimately produces these when a round completes before its
         # window flushes — the publish lands at the flush time)
         self.clamped = 0
+        # pending recurring-stream ticks (schedule_every / schedule_stream).
+        # Streams re-arm only while NON-stream events remain — counting the
+        # ticks themselves would let two concurrent cadences (e.g. ledger
+        # checkpointing + serving publisher + query stream) keep a drained
+        # simulation alive forever by each seeing the other's next tick.
+        self._maintenance = 0
 
     def schedule(self, delay: float, fn: Callable[[], None]) -> None:
         if delay < 0.0:
@@ -92,15 +98,32 @@ class EventLoop:
         alive.  Rides the simulated clock, not event counts."""
         if interval <= 0.0:
             raise ValueError(f"interval must be > 0, got {interval!r}")
+        self.schedule_stream(lambda: interval, fn, stop=stop)
+
+    def schedule_stream(self, next_delay: Callable[[], float],
+                        fn: Callable[[], None],
+                        stop: Optional[Callable[[], bool]] = None) -> None:
+        """Generalized recurring hook: like :meth:`schedule_every`, but the
+        gap before each firing is drawn from ``next_delay()`` (e.g. a seeded
+        Poisson arrival process for a serving query stream).  Draws happen
+        one at a time on the event loop, so a seeded generator stays
+        deterministic.  Drain rule: the stream re-arms only while events
+        OTHER than recurring-stream ticks remain pending, so any number of
+        concurrent cadences wind down together once real work is done —
+        two streams must not keep each other (and a finished simulation)
+        alive by mutually observing the other's next tick."""
 
         def tick() -> None:
+            self._maintenance -= 1
             if stop is not None and stop():
                 return
             fn()
-            if self._heap:                    # other work pending: re-arm
-                self.schedule(interval, tick)
+            if len(self._heap) > self._maintenance:   # real work pending
+                self._maintenance += 1
+                self.schedule(float(next_delay()), tick)
 
-        self.schedule(interval, tick)
+        self._maintenance += 1
+        self.schedule(float(next_delay()), tick)
 
     def run(self, until: Optional[float] = None,
             stop: Optional[Callable[[], bool]] = None,

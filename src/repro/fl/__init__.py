@@ -10,6 +10,11 @@ from repro.fl.cohort import (CNNCohortPrograms, CohortBackend, CohortPrograms,
                              resolve_cohort_mesh)
 from repro.fl.scenarios import (SCENARIOS, Scenario, ScenarioConfig,
                                 as_scenario, dag_attack_metrics)
+from repro.fl.serving import (CNNQueryDriver, ConsensusPublisher,
+                              LMQueryDriver, QueryStream, ServingConfig,
+                              ServingReplica, consensus_over_refs,
+                              frontier_snapshot, make_query_driver,
+                              replica_parity, trees_bitwise_equal)
 
 __all__ = ["CNNBackend", "LMBackend", "ALGORITHMS", "FLConfig",
            "run_centralized", "run_independent", "run_fedavg", "run_fedasync",
@@ -19,4 +24,8 @@ __all__ = ["CNNBackend", "LMBackend", "ALGORITHMS", "FLConfig",
            "LMCohortPrograms", "build_cohort_engine", "perturb_update",
            "register_cohort_programs", "resolve_cohort_mesh",
            "SCENARIOS", "Scenario", "ScenarioConfig", "as_scenario",
-           "dag_attack_metrics"]
+           "dag_attack_metrics",
+           "ServingConfig", "ServingReplica", "ConsensusPublisher",
+           "QueryStream", "CNNQueryDriver", "LMQueryDriver",
+           "make_query_driver", "consensus_over_refs", "frontier_snapshot",
+           "replica_parity", "trees_bitwise_equal"]

@@ -1,20 +1,35 @@
-"""Serving launcher: batched prefill + greedy decode with a KV cache."""
+"""Serving launcher: batched prefill + greedy decode with a KV cache.
+
+The prefill/decode program construction and the greedy KV-cache decode loop
+live here as reusable functions (``make_serving_fns`` / ``greedy_decode`` /
+``extend_caches``) — the live-traffic consensus-serving path
+(:mod:`repro.fl.serving`) drives the same programs against DAG frontier
+replicas that this CLI drives against freshly initialized params.
+"""
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.models import transformer as tfm
+from repro.models.attention import cache_seq_axis
 from repro.runtime import Runtime
 from repro.train.step import make_serve_decode, make_serve_prefill
 
 
 def extend_caches(caches, cfg, extra: int):
+    """Grow every attention cache by ``extra`` slots along its SEQUENCE
+    axis.  The axis is derived from the cache spec
+    (:data:`repro.models.attention.KV_CACHE_TRAILING_DIMS`, counted from the
+    trailing end), not hardcoded: prefill-collected caches carry a leading
+    stacked-layer axis, per-layer caches do not, and both layouts must
+    extend correctly."""
     out = []
     for si, stage in enumerate(cfg.stages):
         d = {}
@@ -24,28 +39,32 @@ def extend_caches(caches, cfg, extra: int):
                 for kk in ("k", "v", "ckv", "krope"):
                     if kk in cc:
                         pad = [(0, 0)] * cc[kk].ndim
-                        pad[2] = (0, extra)
+                        pad[cache_seq_axis(kk, cc[kk].ndim)] = (0, extra)
                         cc[kk] = jnp.pad(cc[kk], pad)
             d[f"l{j}"] = cc
         out.append(d)
     return out
 
 
-def serve(cfg, batch: int, prompt_len: int, new_tokens: int, seed: int = 0):
-    runtime = Runtime()
+def make_serving_fns(cfg, runtime: Optional[Runtime] = None):
+    """The jitted (prefill, decode) pair for one arch config.  ``runtime``
+    carries the kernel-dispatch policy (see :func:`repro.runtime.
+    serve_runtime`); the decode step has no static arguments — every input
+    (params, token, caches, pos) is traced."""
+    runtime = Runtime() if runtime is None else runtime
     prefill = jax.jit(make_serve_prefill(cfg, runtime))
-    decode = jax.jit(make_serve_decode(cfg, runtime),
-                     static_argnames=())
-    key = jax.random.PRNGKey(seed)
-    params = tfm.init_params(key, cfg)
-    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
-    b = {"tokens": prompts}
-    if cfg.encoder is not None:
-        b["enc_embed"] = jax.random.normal(
-            key, (batch, cfg.encoder.n_ctx, cfg.d_model)) * 0.1
+    decode = jax.jit(make_serve_decode(cfg, runtime))
+    return prefill, decode
 
+
+def greedy_decode(prefill_fn, decode_fn, cfg, params, batch,
+                  new_tokens: int):
+    """Prefill ``batch`` then greedy-decode ``new_tokens`` against the KV
+    cache.  Returns {tokens (B, new_tokens) int32, prefill_s, decode_s};
+    both clock reads are synced on the device results."""
+    prompt_len = batch["tokens"].shape[1]
     t0 = time.time()
-    last_logits, caches = prefill(params, b)
+    last_logits, caches = prefill_fn(params, batch)
     caches = extend_caches(caches, cfg, new_tokens)
     jax.block_until_ready(last_logits)
     t_prefill = time.time() - t0
@@ -55,17 +74,32 @@ def serve(cfg, batch: int, prompt_len: int, new_tokens: int, seed: int = 0):
     t0 = time.time()
     for step in range(new_tokens - 1):
         pos = jnp.int32(prompt_len + step)
-        tok, logits, caches = decode(params, tok, caches, pos)
+        tok, logits, caches = decode_fn(params, tok, caches, pos)
         tok = tok[:, None] if tok.ndim == 1 else tok
         generated.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
-    toks = jnp.concatenate(generated, axis=1)
+    return {"tokens": jnp.concatenate(generated, axis=1),
+            "prefill_s": t_prefill, "decode_s": t_decode}
+
+
+def serve(cfg, batch: int, prompt_len: int, new_tokens: int, seed: int = 0):
+    prefill, decode = make_serving_fns(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = tfm.init_params(key, cfg)
+    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    b = {"tokens": prompts}
+    if cfg.encoder is not None:
+        b["enc_embed"] = jax.random.normal(
+            key, (batch, cfg.encoder.n_ctx, cfg.d_model)) * 0.1
+
+    r = greedy_decode(prefill, decode, cfg, params, b, new_tokens)
     return {
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "decode_tok_per_s": batch * (new_tokens - 1) / max(t_decode, 1e-9),
-        "tokens": toks,
+        "prefill_s": r["prefill_s"],
+        "decode_s": r["decode_s"],
+        "decode_tok_per_s": batch * (new_tokens - 1) / max(r["decode_s"],
+                                                           1e-9),
+        "tokens": r["tokens"],
     }
 
 

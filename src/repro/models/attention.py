@@ -74,6 +74,20 @@ def init_attn(key, cfg: ArchConfig, spec: LayerSpec, dtype):
     return p
 
 
+# The KV-cache layout spec: number of trailing dims AFTER the sequence axis
+# for each cache entry ("k"/"v": (n_kv_heads, head_dim); MLA "ckv"/"krope":
+# (rank,)).  Any number of leading axes may be stacked in front (the layer
+# axis the stage scan adds, or none at all), so code that grows a cache
+# along its sequence axis must derive the axis from this spec — counting
+# from the END — never hardcode an index from the front.
+KV_CACHE_TRAILING_DIMS = {"k": 2, "v": 2, "ckv": 1, "krope": 1}
+
+
+def cache_seq_axis(key: str, ndim: int) -> int:
+    """Sequence axis of a KV-cache entry, for any number of leading axes."""
+    return ndim - 1 - KV_CACHE_TRAILING_DIMS[key]
+
+
 def init_kv_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, max_seq: int,
                   dtype=None, leading: tuple = ()):
     """Zero cache for one attention layer (stacked over ``leading``)."""

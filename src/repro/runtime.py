@@ -31,3 +31,13 @@ class Runtime:
 
 
 DEFAULT = Runtime()
+
+
+def serve_runtime(kernel_policy: Optional[str] = None) -> Runtime:
+    """Runtime for the serving path (prefill + KV-cache decode): no
+    signature extraction, kernel hot-spots routed per ``kernel_policy``
+    (None / "reference" keep the stock-XLA math — the same convention the
+    FL backends use for their ``kernel_policy`` knob)."""
+    if kernel_policy is None or kernel_policy == "reference":
+        return Runtime()
+    return Runtime(use_pallas=True, kernel_policy=kernel_policy)

@@ -25,7 +25,8 @@ TESTDATA = REPO_ROOT / "tools" / "repro_lint" / "testdata"
 
 # Path-scoped rules are linted as-if the fixture lived at this relative path.
 VIRTUAL_PATHS = {"DET003": "src/repro/core/fixture.py",
-                 "KER001": "src/repro/fl/fixture.py"}
+                 "KER001": "src/repro/fl/fixture.py",
+                 "SRV001": "src/repro/fl/fixture.py"}
 
 RULES = all_rules()
 RULE_IDS = [r.id for r in RULES]

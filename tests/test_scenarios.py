@@ -243,3 +243,77 @@ def test_lazy_stale_republishes_previous_model(world):
         for a, b in zip(jax.tree_util.tree_leaves(m0),
                         jax.tree_util.tree_leaves(m1)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- interaction with live-traffic serving (repro/fl/serving.py) -------------
+
+
+def _run_dagafl_serving(world, scenario, query_rate=1.0):
+    from repro.fl.serving import ServingConfig
+    backend, client_data, splits = world
+    cfg = DagAflConfig(n_clients=3, max_rounds=2, local_epochs=1, seed=0,
+                       scenario=scenario, target_accuracy=None, patience=100,
+                       serving=ServingConfig(every=2.0, query_rate=query_rate,
+                                             query_batch=8, backend="cnn",
+                                             seed=99))
+    coord = DagAflCoordinator(backend, client_data, splits["test"], cfg,
+                              CostModel(local_epoch=2.0),
+                              make_profiles(3, 0.5, 0))
+    return coord, coord.run()
+
+
+def test_poison_replicas_preserve_honest_floor(world):
+    """A poisoning minority must not collapse what the serving layer hands
+    out: the final replica stays a faithful Eq. 6 aggregate and its
+    test accuracy stays within the robustness-gate floor of the honest
+    run's replica."""
+    from repro.fl.serving import replica_parity
+    backend, _, splits = world
+    coord_h, res_h = _run_dagafl_serving(world, None)
+    sc = Scenario(dataclasses.replace(SCENARIOS["poison"], seed=0), 3)
+    coord_p, res_p = _run_dagafl_serving(world, sc)
+    assert sc.counts()["updates_scaled"] > 0      # the attack actually ran
+    for coord, res in ((coord_h, res_h), (coord_p, res_p)):
+        serving = res.extra["serving"]
+        assert serving["queries"] > 0 and serving["skipped"] == 0
+        assert replica_parity(coord.publisher.replica(), coord.store)
+    acc_h = backend.evaluate(coord_h.publisher.replica().params,
+                             splits["test"])
+    acc_p = backend.evaluate(coord_p.publisher.replica().params,
+                             splits["test"])
+    # mirror of the robustness benchmark's poison accuracy-floor gate
+    assert acc_h - acc_p <= 0.6, (acc_h, acc_p)
+
+
+def test_dropout_never_stalls_publication(world):
+    """Total dropout leaves only genesis on the ledger — the publisher must
+    still bring up replica v0 and keep serving it (noop ticks), with no
+    query ever finding an absent replica."""
+    sc = Scenario(ScenarioConfig(name="d", seed=0, dropout_rate=1.0), 3)
+    coord, res = _run_dagafl_serving(world, sc)
+    assert res.extra["chain_len"] == 1            # genesis only
+    serving = res.extra["serving"]
+    assert serving["replica_versions"] == 1       # v0, never superseded
+    assert serving["publishes_noop"] >= 1         # cadence kept ticking
+    assert serving["queries"] > 0
+    assert serving["skipped"] == 0
+    assert serving["replica_version_hist"] == {"0": serving["queries"]}
+    assert serving["max_seq_lag"] == 0            # frontier never moved
+    rep = coord.publisher.replica()
+    assert rep.version == 0
+    assert rep.frontier == (coord.ledger.genesis_id,)
+
+
+def test_straggler_never_stalls_publication(world):
+    """Heavy-tailed round durations stretch simulated time but must not
+    delay or starve publication: queries keep landing on live replicas."""
+    sc = Scenario(dataclasses.replace(SCENARIOS["straggler"], seed=0,
+                                      straggler_frac=0.5), 3)
+    coord, res = _run_dagafl_serving(world, sc, query_rate=0.5)
+    assert sc.stragglers                          # at least one straggler
+    assert res.rounds > 0
+    serving = res.extra["serving"]
+    assert serving["queries"] > 0 and serving["skipped"] == 0
+    assert serving["replica_versions"] >= 1
+    from repro.fl.serving import replica_parity
+    assert replica_parity(coord.publisher.replica(), coord.store)

@@ -93,7 +93,7 @@ def _ensure_rules_loaded():
         # imported for their @register side effects
         from tools.repro_lint import (rules_api,  # noqa: F401
                                       rules_determinism, rules_jax,
-                                      rules_kernels)
+                                      rules_kernels, rules_serving)
         _RULES_LOADED = True
 
 

@@ -1,0 +1,64 @@
+"""Serving-path hygiene rules (SRV0xx).
+
+PR "Live-traffic consensus serving" made the frontier queryable through
+versioned, double-buffered :class:`repro.fl.serving.ServingReplica`
+snapshots.  The atomicity guarantee — a reader never observes a half-built
+frontier, and replica refs are protected from bounded-ledger eviction —
+only holds if consumers actually go through the publisher.  A direct
+frontier read (``ledger.tips()`` / ``tips_by_freshness()`` or the
+coordinator's ``global_model()``) outside the coordinator/ledger layer and
+the serving module itself re-derives the consensus at an arbitrary instant:
+it can straddle a publish, pin nothing against eviction, and silently fork
+the staleness accounting the serve gate pins.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.repro_lint.engine import (Finding, ModuleContext, Rule, qualname,
+                                     register)
+
+#: frontier-consensus reads that belong behind the publisher
+_FRONTIER_READS = {"tips", "tips_by_freshness", "global_model"}
+
+#: who may read the frontier directly: the ledger/coordinator layer (it
+#: OWNS the frontier) and the serving module (the one sanctioned
+#: materialization point)
+_EXEMPT_TREES = ("src/repro/core/",)
+_EXEMPT_FILES = ("src/repro/fl/serving.py",)
+
+
+@register
+class ServingFrontierBypassRule(Rule):
+    id = "SRV001"
+    name = "serving-frontier-bypass"
+    family = "api-hygiene"
+    description = ("direct frontier read (ledger.tips()/tips_by_freshness()/"
+                   "coordinator.global_model()) outside core/ and "
+                   "fl/serving.py — consume the published ServingReplica "
+                   "(ConsensusPublisher.replica()) so queries stay atomic, "
+                   "eviction-protected and staleness-accounted")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        rel = ctx.rel_path
+        if "src/repro/" not in rel:
+            return
+        if any(t in rel for t in _EXEMPT_TREES) or \
+                any(rel.endswith(f) for f in _EXEMPT_FILES):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            qn = qualname(node.func)
+            if qn is None or "." not in qn:
+                continue
+            attr = qn.rsplit(".", 1)[1]
+            if attr in _FRONTIER_READS:
+                yield self.finding(
+                    ctx, node,
+                    f"'{qn}()' reads the tip frontier directly outside "
+                    "src/repro/core/ and fl/serving.py — a raw read can "
+                    "straddle a publish and pins nothing against bounded-"
+                    "ledger eviction; query ConsensusPublisher.replica() "
+                    "(an immutable Eq. 6 snapshot) instead")

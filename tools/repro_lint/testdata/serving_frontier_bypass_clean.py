@@ -1,0 +1,8 @@
+"""SRV001 clean: queries consume the published immutable replica."""
+
+
+def answer_query(publisher):
+    replica = publisher.replica()     # atomic, eviction-protected snapshot
+    if replica is None:
+        return None
+    return replica.params, replica.frontier, replica.ledger_seq

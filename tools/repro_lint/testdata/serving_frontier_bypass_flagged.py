@@ -1,0 +1,8 @@
+"""SRV001 flagged: re-deriving frontier consensus outside the publisher."""
+
+
+def answer_query(coordinator, ledger, store):
+    tips = ledger.tips()                       # raw frontier read
+    fresh = ledger.tips_by_freshness(limit=2)  # same, freshness-ordered
+    model = coordinator.global_model()         # re-derives Eq. 6 mid-publish
+    return tips, fresh, model
